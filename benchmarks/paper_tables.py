@@ -1,0 +1,101 @@
+"""Benchmarks reproducing every table/figure of the paper.
+
+Each function returns rows and prints ``name,us_per_call,derived`` CSV lines
+(us_per_call = wall time of computing the table entry; derived = the value).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import bwmodel
+from repro.core.cnn_zoo import PAPER_CNNS, PAPER_TABLE3, get_cnn
+
+P_TABLE1 = (512, 2048, 16384)
+P_TABLE2 = (512, 1024, 2048, 4096, 8192, 16384)
+STRATEGIES = ("max_input", "max_output", "equal", "paper_opt")
+
+# Published values for validation deltas (Table I, paper_opt column).
+PAPER_T1_OPT = {
+    "alexnet": {512: 25.1, 2048: 12.6, 16384: 4.3},
+    "vgg16": {512: 442.5, 2048: 237.2, 16384: 83.5},
+    "squeezenet": {512: 52.0, 2048: 26.2, 16384: 11.1},
+    "googlenet": {512: 93.5, 2048: 47.7, 16384: 17.5},
+    "resnet18": {512: 88.9, 2048: 46.8, 16384: 16.0},
+    "resnet50": {512: 952.6, 2048: 479.5, 16384: 168.5},
+    "mobilenet": {512: 68.3, 2048: 35.0, 16384: 16.1},
+    "mnasnet": {512: 373.4, 2048: 183.0, 16384: 66.0},
+}
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def table1() -> list[str]:
+    """Table I: BW (M activations) per partition strategy x P x CNN."""
+    rows = []
+    for net in PAPER_CNNS:
+        for p in P_TABLE1:
+            for strat in STRATEGIES:
+                val, us = _timed(lambda: bwmodel.network_table(
+                    net, p, strat, paper_convention=True) / 1e6)
+                rows.append(f"table1/{net}/P{p}/{strat},{us:.0f},{val:.2f}")
+    return rows
+
+
+def table2() -> list[str]:
+    """Table II: passive vs active controller x P x CNN (paper_opt part.)."""
+    rows = []
+    for net in PAPER_CNNS:
+        for p in P_TABLE2:
+            for ctrl in ("passive", "active"):
+                val, us = _timed(lambda: bwmodel.network_table(
+                    net, p, "paper_opt", ctrl, paper_convention=True) / 1e6)
+                rows.append(f"table2/{net}/P{p}/{ctrl},{us:.0f},{val:.2f}")
+    return rows
+
+
+def table3() -> list[str]:
+    """Table III: minimum BW (unlimited MACs), with deviation vs paper."""
+    rows = []
+    for net in PAPER_CNNS:
+        val, us = _timed(lambda: bwmodel.min_bandwidth(get_cnn(net)) / 1e6)
+        dev = 100 * (val - PAPER_TABLE3[net]) / PAPER_TABLE3[net]
+        rows.append(f"table3/{net},{us:.0f},{val:.3f}")
+        rows.append(f"table3_dev_pct/{net},0,{dev:.1f}")
+    return rows
+
+
+def fig2() -> list[str]:
+    """Fig. 2: % bandwidth saving of the active controller."""
+    rows = []
+    for net in PAPER_CNNS:
+        for p in P_TABLE2:
+            def saving():
+                pas = bwmodel.network_table(net, p, "paper_opt", "passive",
+                                            paper_convention=True)
+                act = bwmodel.network_table(net, p, "paper_opt", "active",
+                                            paper_convention=True)
+                return 100.0 * (1 - act / pas)
+            val, us = _timed(saving)
+            rows.append(f"fig2/{net}/P{p},{us:.0f},{val:.1f}")
+    return rows
+
+
+def beyond_exact_search() -> list[str]:
+    """Beyond-paper: integer-exact partition search + groups-aware model +
+    active-aware re-optimization (factor 2 in eq 7 drops when reads are
+    free)."""
+    rows = []
+    for net in PAPER_CNNS:
+        for p in P_TABLE1:
+            paper, us1 = _timed(lambda: bwmodel.network_bandwidth(
+                get_cnn(net), p, "paper_opt", exact_iters=True) / 1e6)
+            exact, us2 = _timed(lambda: bwmodel.network_bandwidth(
+                get_cnn(net), p, "exact_opt") / 1e6)
+            gain = 100 * (1 - exact / paper)
+            rows.append(f"beyond/exact_vs_eq7/{net}/P{p},{us1+us2:.0f},{gain:.2f}")
+    return rows

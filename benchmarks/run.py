@@ -1,0 +1,39 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  table1  — Table I   (partition strategies x P x 8 CNNs)
+  table2  — Table II  (passive vs active memory controller)
+  table3  — Table III (minimum bandwidth) + deviation vs paper
+  fig2    — Fig. 2    (% saving of the active controller)
+  beyond  — beyond-paper exact-search gains
+  kernels — VMEM-level active/passive traffic + interpret timings
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernel_traffic, paper_tables
+
+    sections = {
+        "table1": paper_tables.table1,
+        "table2": paper_tables.table2,
+        "table3": paper_tables.table3,
+        "fig2": paper_tables.fig2,
+        "beyond": paper_tables.beyond_exact_search,
+        "kernel_traffic": kernel_traffic.traffic_rows,
+        "kernel_interpret": kernel_traffic.interpret_rows,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if only and name != only:
+            continue
+        for row in fn():
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

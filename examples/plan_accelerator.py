@@ -1,0 +1,22 @@
+"""Accelerator design-space exploration with the paper's model: sweep MAC
+budgets and controllers across all eight CNNs and print the layer-level plan
+for one of them.
+
+  PYTHONPATH=src python examples/plan_accelerator.py [cnn]
+"""
+import sys
+
+from repro.core import plan_network
+from repro.core.bwmodel import network_table
+from repro.core.cnn_zoo import PAPER_CNNS
+
+net = sys.argv[1] if len(sys.argv) > 1 else "mobilenet"
+
+print(f"{'CNN':<12}" + "".join(f"{p:>12}" for p in (512, 2048, 8192, 16384)))
+for cnn in PAPER_CNNS:
+    vals = [network_table(cnn, p, "exact_opt", "active") / 1e6
+            for p in (512, 2048, 8192, 16384)]
+    print(f"{cnn:<12}" + "".join(f"{v:12.1f}" for v in vals))
+
+print()
+print(plan_network(net, 2048).report())

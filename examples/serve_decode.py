@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + decode a small model with batched
+requests, reporting TTFT and tokens/s.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = ["--arch", "gemma-2b", "--smoke", "--requests", "8",
+            "--batch", "4", "--prompt-len", "64", "--gen-len", "16"]
+    args += sys.argv[1:]
+    main(args)

@@ -1,0 +1,16 @@
+"""End-to-end training driver: train a reduced qwen2 on synthetic data for a
+few hundred steps with checkpointing + fault tolerance.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(Thin wrapper over repro.launch.train — the production launcher.)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = ["--arch", "qwen2-1.5b", "--smoke", "--steps", "300",
+            "--batch", "8", "--seq", "256", "--ckpt-every", "100"]
+    args += sys.argv[1:]
+    main(args)

@@ -1,0 +1,10 @@
+"""Architecture registry: the 10 assigned architectures (full + smoke-reduced)
+plus shape definitions. ``get_config(name)`` / ``get_smoke(name)``."""
+
+from repro.configs.base import (SHAPES, ArchConfig, EncoderCfg, MlaCfg,
+                                MoeCfg, ShapeCfg, SsmCfg, applicable_shapes)
+from repro.configs.registry import ARCHS, get_config, get_smoke, list_archs
+
+__all__ = ["SHAPES", "ArchConfig", "EncoderCfg", "MlaCfg", "MoeCfg",
+           "ShapeCfg", "SsmCfg", "applicable_shapes", "ARCHS", "get_config",
+           "get_smoke", "list_archs"]

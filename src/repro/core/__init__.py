@@ -1,0 +1,31 @@
+"""The paper's primary contribution: partial-sum-aware feature-map
+partitioning (first-order analytical bandwidth model + optimal partition) and
+the active memory controller, plus the TPU-native generalization to matmul
+block tiling.
+
+Layout:
+  bwmodel.py      eqs (1)-(7), four partition strategies, passive/active traffic
+  cnn_zoo.py      the paper's eight CNNs as programmatic layer tables
+  partitioner.py  VMEM-budget block-shape planning for Pallas/XLA matmuls
+  amc.py          executable, instrumented active-memory-controller model
+  planner.py      whole-network partition schedules
+"""
+
+from repro.core.bwmodel import (CONTROLLERS, STRATEGIES, Partition,
+                                layer_bandwidth, min_bandwidth,
+                                network_bandwidth, network_table,
+                                optimal_m_realvalued, partition_layer)
+from repro.core.cnn_zoo import PAPER_CNNS, PAPER_TABLE3, ConvLayer, get_cnn
+from repro.core.partitioner import (MatmulBlocks, first_order_block,
+                                    matmul_traffic, plan_matmul_blocks,
+                                    traffic_model_bytes)
+from repro.core.planner import NetworkPlan, plan_network
+
+__all__ = [
+    "CONTROLLERS", "STRATEGIES", "Partition", "layer_bandwidth",
+    "min_bandwidth", "network_bandwidth", "network_table",
+    "optimal_m_realvalued", "partition_layer", "PAPER_CNNS", "PAPER_TABLE3",
+    "ConvLayer", "get_cnn", "MatmulBlocks", "first_order_block",
+    "matmul_traffic", "plan_matmul_blocks", "traffic_model_bytes",
+    "NetworkPlan", "plan_network",
+]

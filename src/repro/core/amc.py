@@ -1,0 +1,146 @@
+"""Behavioural model of the paper's active memory controller (Section III).
+
+The controller owns an SRAM region and accepts commands over the interconnect
+(the paper signals them via AXI4 'awuser' sideband bits):
+
+  NORMAL   — plain read/write (passive behaviour)
+  ADD      — read-update-write performed *inside* the controller: the compute
+             engine ships only the new partial sum; the old value never
+             crosses the interconnect
+  ACT      — like ADD but applies an activation (ReLU here) after the final
+             update, offloading the activation unit as well
+
+Every word crossing the interconnect and every SRAM access is tallied, so the
+analytical model of `bwmodel.py` can be validated against an executable
+implementation, and the convolution result against the jnp oracle.
+
+This is a *simulation* of SoC behaviour (numpy-level, used by tests and
+benchmarks); the TPU production analogue is the VMEM-resident accumulator in
+`repro.kernels.psum_matmul` / `conv2d_psum`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.bwmodel import Partition, layer_bandwidth
+from repro.core.cnn_zoo import ConvLayer
+
+
+@dataclasses.dataclass
+class TrafficMeter:
+    interconnect_words: int = 0   # words crossing the bus (the paper's "BW")
+    sram_reads: int = 0
+    sram_writes: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class MemoryController:
+    """SRAM + controller with optional active (in-controller add) support."""
+
+    def __init__(self, shape: tuple[int, ...], active: bool):
+        self.sram = np.zeros(shape, np.float32)
+        self.active = active
+        self.meter = TrafficMeter()
+
+    # -- passive interface ---------------------------------------------------
+    def read(self, idx) -> np.ndarray:
+        vals = self.sram[idx]
+        self.meter.sram_reads += vals.size
+        self.meter.interconnect_words += vals.size
+        return vals
+
+    def write(self, idx, vals: np.ndarray) -> None:
+        self.sram[idx] = vals
+        self.meter.sram_writes += vals.size
+        self.meter.interconnect_words += vals.size
+
+    # -- accumulate: routed through the controller when active ----------------
+    def accumulate(self, idx, vals: np.ndarray, first: bool, last: bool = False,
+                   act: bool = False) -> None:
+        """Add a partial-sum tile. Passive: the engine reads the old value
+        over the bus, adds, writes back. Active: a single ADD command carries
+        only the new values; the read-modify-write stays inside the SRAM."""
+        if first:
+            self.write(idx, vals)
+        elif self.active:
+            old = self.sram[idx]
+            self.meter.sram_reads += vals.size      # internal, not on the bus
+            self.sram[idx] = old + vals
+            self.meter.sram_writes += vals.size
+            self.meter.interconnect_words += vals.size   # only the new psums
+        else:
+            old = self.read(idx)                    # read-back over the bus
+            self.write(idx, old + vals)
+        if last and act:
+            # activation offload: in-controller ReLU, no extra bus traffic for
+            # active; passive engines must read + write once more.
+            if self.active:
+                self.sram[idx] = np.maximum(self.sram[idx], 0.0)
+                self.meter.sram_reads += vals.size
+                self.meter.sram_writes += vals.size
+            else:
+                old = self.read(idx)
+                self.write(idx, np.maximum(old, 0.0))
+
+
+def _conv2d_block(x: np.ndarray, w: np.ndarray, stride: int, pad: int) -> np.ndarray:
+    """Plain conv (cin-block -> cout-block) on numpy, NCHW / OIHW."""
+    cin, hi, wi = x.shape
+    cout, _, kh, kw = w.shape
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ho = (hi + 2 * pad - kh) // stride + 1
+    wo = (wi + 2 * pad - kw) // stride + 1
+    # im2col
+    cols = np.empty((cin * kh * kw, ho * wo), np.float32)
+    i = 0
+    for c in range(cin):
+        for dy in range(kh):
+            for dx in range(kw):
+                patch = xp[c, dy:dy + stride * ho:stride, dx:dx + stride * wo:stride]
+                cols[i] = patch.reshape(-1)
+                i += 1
+    out = w.reshape(cout, -1) @ cols
+    return out.reshape(cout, ho, wo)
+
+
+def run_partitioned_conv(layer: ConvLayer, part: Partition, x: np.ndarray,
+                         w: np.ndarray, active: bool, pad: int | None = None,
+                         act: bool = False) -> tuple[np.ndarray, TrafficMeter]:
+    """Execute the paper's partitioned loop nest with an instrumented memory
+    controller, returning (output, traffic). `x`: (cin, hi, wi) float32,
+    `w`: (cout, cin, k, k). Input reads are also metered (input SRAM)."""
+    assert layer.groups == 1, "meter model is for dense convs"
+    pad = layer.k // 2 if pad is None else pad
+    m, n = min(part.m, layer.cin), min(part.n, layer.cout)
+    out_ctrl = MemoryController((layer.cout, layer.ho, layer.wo), active)
+    in_meter = TrafficMeter()
+
+    n_in_blocks = math.ceil(layer.cin / m)
+    for co0 in range(0, layer.cout, n):
+        co1 = min(co0 + n, layer.cout)
+        for bi, ci0 in enumerate(range(0, layer.cin, m)):
+            ci1 = min(ci0 + m, layer.cin)
+            xin = x[ci0:ci1]
+            in_meter.interconnect_words += xin.size
+            in_meter.sram_reads += xin.size
+            psum = _conv2d_block(xin, w[co0:co1, ci0:ci1], layer.stride, pad)
+            out_ctrl.accumulate(np.s_[co0:co1], psum, first=(bi == 0),
+                                last=(bi == n_in_blocks - 1), act=act)
+    return out_ctrl.sram.copy(), TrafficMeter(
+        interconnect_words=in_meter.interconnect_words + out_ctrl.meter.interconnect_words,
+        sram_reads=in_meter.sram_reads + out_ctrl.meter.sram_reads,
+        sram_writes=out_ctrl.meter.sram_writes)
+
+
+def analytical_interconnect_words(layer: ConvLayer, part: Partition,
+                                  active: bool) -> float:
+    """What bwmodel.py predicts for the metered loop above (ceil iterations)."""
+    b_i, b_o = layer_bandwidth(layer, part, "active" if active else "passive",
+                               exact_iters=True)
+    return b_i + b_o

@@ -1,0 +1,79 @@
+"""Network-level partition planner: applies the bandwidth model across a whole
+CNN (or any list of contraction layers) and emits a per-layer schedule.
+
+This is what an accelerator compiler front-end would consume: for each layer,
+the chosen (m, n), the iteration counts, the predicted interconnect traffic
+under both controllers, and network totals per strategy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import bwmodel
+from repro.core.cnn_zoo import ConvLayer, get_cnn
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    layer: ConvLayer
+    partition: bwmodel.Partition
+    in_iters: int
+    out_iters: int
+    bw_passive: float
+    bw_active: float
+
+    @property
+    def saving_pct(self) -> float:
+        return 100.0 * (1.0 - self.bw_active / self.bw_passive)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    name: str
+    p_macs: int
+    strategy: str
+    layers: tuple[LayerPlan, ...]
+
+    @property
+    def total_passive(self) -> float:
+        return sum(l.bw_passive for l in self.layers)
+
+    @property
+    def total_active(self) -> float:
+        return sum(l.bw_active for l in self.layers)
+
+    @property
+    def saving_pct(self) -> float:
+        return 100.0 * (1.0 - self.total_active / self.total_passive)
+
+    def report(self) -> str:
+        lines = [f"# plan: {self.name} @ P={self.p_macs} strategy={self.strategy}",
+                 f"{'layer':<28}{'m':>5}{'n':>5}{'it_in':>6}{'it_out':>7}"
+                 f"{'BW passive':>14}{'BW active':>14}{'save%':>7}"]
+        for lp in self.layers:
+            lines.append(f"{lp.layer.name:<28}{lp.partition.m:>5}{lp.partition.n:>5}"
+                         f"{lp.in_iters:>6}{lp.out_iters:>7}"
+                         f"{lp.bw_passive:>14.3e}{lp.bw_active:>14.3e}"
+                         f"{lp.saving_pct:>7.1f}")
+        lines.append(f"{'TOTAL':<28}{'':>23}{self.total_passive:>14.3e}"
+                     f"{self.total_active:>14.3e}{self.saving_pct:>7.1f}")
+        return "\n".join(lines)
+
+
+def plan_network(name: str, p_macs: int, strategy: str = "paper_opt") -> NetworkPlan:
+    plans = []
+    for layer in get_cnn(name):
+        part = bwmodel.partition_layer(layer, p_macs, strategy)
+        g = layer.groups
+        mg, ng = layer.cin // g, layer.cout // g
+        bw_p = sum(bwmodel.layer_bandwidth(layer, part, "passive", exact_iters=True))
+        bw_a = sum(bwmodel.layer_bandwidth(layer, part, "active", exact_iters=True))
+        plans.append(LayerPlan(
+            layer=layer, partition=part,
+            in_iters=math.ceil(mg / min(part.m, mg)),
+            out_iters=math.ceil(ng / min(part.n, ng)),
+            bw_passive=bw_p, bw_active=bw_a))
+    return NetworkPlan(name=name, p_macs=p_macs, strategy=strategy,
+                       layers=tuple(plans))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  psum_matmul.py      blocked GEMM: active (VMEM-resident accumulator,
+                      reduction-innermost grid) vs passive (HBM psum spill,
+                      reduction-outermost) schedules + fused activation
+  conv2d_psum.py      the paper's channel-partitioned conv loop nest on MXU
+  flash_attention.py  online-softmax attention (active accumulation for
+                      attention partial sums)
+  ops.py              jit wrappers; block shapes from core.partitioner
+  ref.py              pure-jnp oracles (tests assert allclose in interpret
+                      mode across shape/dtype sweeps)
+"""

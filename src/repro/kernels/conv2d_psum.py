@@ -1,0 +1,106 @@
+"""Channel-partitioned conv2d — the paper's exact loop nest on the MXU.
+
+The paper's accelerator processes m input maps x n output maps per iteration
+(eq 1: K^2*m*n <= P). Here the grid is (cout_blocks x cin_blocks) with the
+input-channel (reduction) dimension innermost; the n-channel output tile is a
+VMEM-resident fp32 accumulator revisited across cin blocks (the active memory
+controller), with the activation fused into the final step (ACT command).
+
+Spatial dims are not tiled (the paper never tiles space); each grid step does
+a K*K static unroll of (n x m) @ (m x Ho*Wo) MXU matmuls over shifted input
+views — the TPU-native formulation of `p_sum[co] += f_in * wt`.
+
+Layout: x (B, Cin, H, W) NCHW, w (Cout, Cin, K, K) OIHW — the paper's
+indexing. ops.py pads input spatially before the call.
+
+TARGET: TPU. VALIDATED with interpret=True vs ref.py (lax.conv oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.psum_matmul import ACTIVATIONS
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kk: int, stride: int,
+                 act: str, n_ci: int):
+    """One (cout-block, cin-block) step over the full spatial extent.
+
+    x_ref: (m, Hp, Wp) padded input slab for this cin block
+    w_ref: (n, m, K, K)
+    o_ref: (n, Ho, Wo)
+    acc_ref: (n, Ho * Wo) fp32 scratch, VMEM-resident across cin blocks.
+    """
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n, ho, wo = o_ref.shape
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = acc_ref[...]
+    for ky in range(kk):
+        for kx in range(kk):
+            # shifted strided view: (m, Ho, Wo)
+            patch = jax.lax.slice(
+                x, (0, ky, kx),
+                (x.shape[0], ky + (ho - 1) * stride + 1, kx + (wo - 1) * stride + 1),
+                (1, stride, stride))
+            acc += jnp.dot(w[:, :, ky, kx], patch.reshape(x.shape[0], ho * wo),
+                           preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_ci - 1)
+    def _epilogue():
+        o_ref[...] = ACTIVATIONS[act](acc_ref[...]).reshape(n, ho, wo).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "stride",
+                                             "act", "interpret"))
+def conv2d_psum(x: jax.Array, w: jax.Array, *, block_m: int = 32,
+                block_n: int = 32, stride: int = 1, act: str = "none",
+                interpret: bool = True) -> jax.Array:
+    """Partitioned conv for a single image: x (Cin, Hp, Wp) already padded,
+    w (Cout, Cin, K, K). block_m/block_n are the paper's m and n."""
+    cin, hp, wp = x.shape
+    cout, cin2, kk, _ = w.shape
+    assert cin == cin2
+    ho = (hp - kk) // stride + 1
+    wo = (wp - kk) // stride + 1
+    bm = min(block_m, cin)
+    bn = min(block_n, cout)
+    # pad channels to block multiples (zero channels contribute zero psums)
+    pc_in = (-cin) % bm
+    pc_out = (-cout) % bn
+    if pc_in:
+        x = jnp.pad(x, ((0, pc_in), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pc_in), (0, 0), (0, 0)))
+    if pc_out:
+        w = jnp.pad(w, ((0, pc_out), (0, 0), (0, 0), (0, 0)))
+    n_co = w.shape[0] // bn
+    n_ci = x.shape[0] // bm
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, kk=kk, stride=stride, act=act,
+                          n_ci=n_ci),
+        grid=(n_co, n_ci),
+        in_specs=[
+            pl.BlockSpec((bm, hp, wp), lambda co, ci: (ci, 0, 0)),
+            pl.BlockSpec((bn, bm, kk, kk), lambda co, ci: (co, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, ho, wo), lambda co, ci: (co, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((w.shape[0], ho, wo), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, ho * wo), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)
+    return out[:cout]

@@ -1,0 +1,112 @@
+"""Flash attention — the paper's active-accumulation principle applied to
+attention: the (running max, running denominator, weighted-value accumulator)
+triple is the partial sum, kept VMEM-resident across KV blocks instead of
+materializing S = QK^T to HBM (which would be the passive schedule).
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost ('arbitrary'); causal
+masking skips fully-masked kv blocks' contribution via the mask itself (the
+index space is rectangular; masked blocks contribute exp(-inf)=0).
+
+TARGET: TPU. VALIDATED with interpret=True against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, n_kv: int,
+                  q_offset: int):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        iq = pl.program_id(1)
+        q_ids = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+        k_ids = kv * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_ids >= k_ids, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                     # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)            # rescale old partial sums
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(kv == n_kv - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret",
+                                             "q_offset"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    q_offset: int = 0, interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BH, Skv, D). GQA is handled by the caller
+    (reshape/broadcast of kv heads). q_offset shifts causal indices for
+    decode (q positions start at q_offset)."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    pq = (-sq) % bq
+    pk = (-skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded kv keys masked via causal ids > all real q ids? For non-causal
+        # we must mask explicitly: push padded keys to -inf by zero-padding k
+        # and masking in-kernel using kv index bounds is more complex; instead
+        # pad and rely on causal mask for causal=True, or mask here:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    gq = q.shape[1] // bq
+    gk = k.shape[1] // bk
+    scale = 1.0 / (d ** 0.5)
+
+    if pk and not causal:
+        raise NotImplementedError("kv padding requires causal=True (mask "
+                                  "covers the padded tail) or pre-masked kv")
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal, bq=bq,
+                          bk=bk, n_kv=gk, q_offset=q_offset),
+        grid=(bh, gq, gk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,81 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These choose block shapes via the partial-sum-aware planner
+(``repro.core.partitioner``) — the paper's partitioning policy applied to
+TPU tiles — and handle padding/layout so callers see plain array ops.
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware pass interpret=False (the kernels are written for Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bwmodel import Partition, partition_layer
+from repro.core.cnn_zoo import ConvLayer
+from repro.core.partitioner import plan_matmul_blocks
+from repro.kernels import conv2d_psum as _conv
+from repro.kernels import flash_attention as _flash
+from repro.kernels import psum_matmul as _mm
+
+
+def matmul(x: jax.Array, w: jax.Array, *, act: str = "none",
+           controller: str = "active", vmem_budget: int | None = None,
+           interpret: bool = True) -> jax.Array:
+    """Partial-sum-scheduled GEMM with planner-chosen blocks."""
+    m, k = x.shape
+    n = w.shape[1]
+    kwargs = {} if vmem_budget is None else {"vmem_budget": vmem_budget}
+    blocks = plan_matmul_blocks(m, n, k, controller=controller,
+                                max_block=512, **kwargs)
+    return _mm.psum_matmul(x, w, bm=min(blocks.bm, _round_up(m, 8)),
+                           bn=min(blocks.bn, _round_up(n, 128)),
+                           bk=min(blocks.bk, _round_up(k, 128)),
+                           act=act, controller=controller,
+                           interpret=interpret)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int | None = None,
+           p_macs: int = 2048, strategy: str = "paper_opt", act: str = "none",
+           interpret: bool = True) -> jax.Array:
+    """Partitioned conv2d for one image. x: (Cin, H, W), w: (Cout, Cin, K, K).
+    The (m, n) channel partition comes from the paper's strategy at `p_macs`."""
+    cin, h, w_sp = x.shape
+    cout, _, kk, _ = w.shape
+    pad = kk // 2 if pad is None else pad
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    hp = h + 2 * pad
+    ho = (hp - kk) // stride + 1
+    layer = ConvLayer(name="op", cin=cin, cout=cout, k=kk, wi=h, hi=h,
+                      wo=ho, ho=ho, stride=stride)
+    part: Partition = partition_layer(layer, p_macs, strategy)
+    return _conv.conv2d_psum(x, w, block_m=part.m, block_n=part.n,
+                             stride=stride, act=act, interpret=interpret)
+
+
+def gqa_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, q_offset: int = 0,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) with Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    out = _flash.flash_attention(
+        q.reshape(b * hq, sq, d), k.reshape(b * hq, skv, d),
+        v.reshape(b * hq, skv, d), causal=causal, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(b, hq, sq, d)

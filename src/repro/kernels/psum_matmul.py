@@ -1,0 +1,152 @@
+"""Blocked matmul with partial-sum accumulation — the paper's technique at the
+VMEM level.
+
+Two grid schedules compute the identical GEMM but move partial sums through
+different levels of the memory hierarchy:
+
+* ``active``  — grid (gm, gn, gk), reduction innermost. The fp32 accumulator
+  tile lives in a VMEM scratch buffer that is *revisited* across the k-steps:
+  the addition happens at the memory closest to the data and the HBM output
+  traffic is a single bf16 write of C. This is the TPU-native analogue of the
+  paper's active memory controller (the controller that performs
+  read-update-write locally), including the fused activation epilogue
+  (the paper's ACT command).
+
+* ``passive`` — grid (gk, gm, gn), reduction outermost. Every k-step sweeps
+  all output blocks, so each C tile is written to and read back from HBM once
+  per reduction step (fp32), exactly the paper's "partial sums must be read
+  before being updated". This is the baseline whose traffic the paper (and our
+  ``core.partitioner`` model) charges at ``(2*gk - 1) * M * N`` words.
+
+Block shapes are chosen by ``repro.core.partitioner.plan_matmul_blocks`` — the
+integer-exact generalization of the paper's eq (7).
+
+TARGET: TPU (pl.pallas_call + BlockSpec, MXU-aligned blocks). VALIDATED on CPU
+via interpret=True against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+def _active_kernel(x_ref, w_ref, o_ref, acc_ref, *, act: str, n_k: int):
+    """Reduction-innermost: acc tile stays resident in VMEM across k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        # The paper's ACT command: activation applied at the accumulator,
+        # no extra HBM round-trip.
+        o_ref[...] = ACTIVATIONS[act](acc_ref[...]).astype(o_ref.dtype)
+
+
+def _passive_kernel(x_ref, w_ref, o_ref):
+    """Reduction-outermost: the output tile round-trips HBM per k-step."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "act",
+                                             "controller", "interpret",
+                                             "out_dtype"))
+def psum_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
+                bk: int = 256, act: str = "none", controller: str = "active",
+                interpret: bool = True, out_dtype=None) -> jax.Array:
+    """C = act(x @ w) with explicit partial-sum schedule.
+
+    x: (M, K), w: (K, N). Shapes are zero-padded to block multiples; the
+    result is sliced back. ``controller`` selects the grid schedule above.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if out_dtype is None:
+        out_dtype = x.dtype
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    gm, gn, gk = mp // bm, np_ // bn, kp // bk
+
+    if controller == "active":
+        out = pl.pallas_call(
+            functools.partial(_active_kernel, act=act, n_k=gk),
+            grid=(gm, gn, gk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(xp, wp)
+    elif controller == "passive":
+        psums = pl.pallas_call(
+            _passive_kernel,
+            grid=(gk, gm, gn),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda kk, i, j: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda kk, i, j: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda kk, i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("arbitrary", "parallel", "parallel")),
+            interpret=interpret,
+        )(xp, wp)
+        # Passive engines apply the activation after reading the final psums
+        # back — an extra HBM round-trip the active schedule fuses away.
+        out = ACTIVATIONS[act](psums).astype(out_dtype)
+    else:
+        raise ValueError(controller)
+    return out[:m, :n]
+
+
+def hbm_traffic_bytes(m: int, n: int, k: int, *, bm: int, bn: int, bk: int,
+                      controller: str, in_bytes: int = 2,
+                      out_bytes: int = 2) -> float:
+    """Analytical HBM traffic of the schedules above (validated in tests
+    against core.partitioner.traffic_model_bytes)."""
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
+    io = (gn * m * k + gm * k * n) * in_bytes
+    if controller == "active":
+        return io + m * n * out_bytes
+    return io + ((gk - 1) * 2 + 1) * m * n * 4  # fp32 spills + final

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.psum_matmul import ACTIVATIONS
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, act: str = "none",
+               out_dtype=None) -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = ACTIVATIONS[act](out)
+    return out.astype(out_dtype or x.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+               act: str = "none") -> jax.Array:
+    """x: (Cin, Hp, Wp) pre-padded, w: (Cout, Cin, K, K) -> (Cout, Ho, Wo)."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+    return ACTIVATIONS[act](out).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BH, Skv, D)."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) / (q.shape[-1] ** 0.5)
+    if causal:
+        qi = jnp.arange(q.shape[1])[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * builds the step function (train / prefill / decode) with the production
+    sharding rules,
+  * lowers against ShapeDtypeStruct inputs (no allocation),
+  * compiles (SPMD partitioning must succeed — sharding bugs fail here),
+  * records memory_analysis / cost_analysis / collective bytes to JSON for
+    the roofline report.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import steps as ST
+from repro.optim import adamw
+from repro.roofline import analysis as RA
+from repro.sharding import rules as RL
+from repro.sharding.api import make_parallel
+
+
+def build_jitted(cfg, shape, mesh, *, psum_strategy="active", remat="full",
+                 donate=True, weight_mode="fsdp", flash_decode=False,
+                 seq_shard_attn=True):
+    parallel = make_parallel(mesh, psum_strategy=psum_strategy, remat=remat,
+                             flash_decode=flash_decode,
+                             seq_shard_attn=seq_shard_attn)
+    sp = SP.input_specs(cfg, shape)
+    p_sh = RL.params_shardings(mesh, sp["params"], weight_mode)
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        fn = ST.make_train_step(cfg, opt_cfg, parallel)
+        in_sh = (p_sh, RL.opt_state_shardings(mesh, sp["opt_state"]),
+                 RL.batch_shardings(mesh, sp["batch"]))
+        args = (sp["params"], sp["opt_state"], sp["batch"])
+        jitted = jax.jit(fn, in_shardings=in_sh,
+                         donate_argnums=(0, 1) if donate else ())
+    elif shape.kind == "prefill":
+        fn = ST.make_prefill_step(cfg, shape.seq_len, parallel)
+        in_sh = (p_sh, RL.batch_shardings(mesh, sp["batch"]))
+        args = (sp["params"], sp["batch"])
+        jitted = jax.jit(fn, in_shardings=in_sh)
+    else:
+        fn = ST.make_decode_step(cfg, parallel)
+        c_sh = RL.caches_shardings(mesh, sp["caches"])
+        tok_sh = RL.batch_shardings(mesh, sp["token"])
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh),
+                         donate_argnums=(1,) if donate else ())
+        args = (sp["params"], sp["caches"], sp["token"])
+    return jitted, args
+
+
+def _shallow(cfg, n: int):
+    """Config with n unrolled periods (and n encoder layers) for the cost
+    extrapolation compiles."""
+    import dataclasses
+    repl = {"n_periods": n, "unroll_scan": True,
+            "first_dense_layers": 0,
+            # cost compiles: single microbatch (the accumulation scan is a
+            # while loop; per-step flops/bytes are M-invariant in total)
+            "train_microbatches": 1}
+    if cfg.encoder is not None:
+        repl["encoder"] = dataclasses.replace(cfg.encoder, n_layers=n)
+    return dataclasses.replace(cfg, **repl)
+
+
+def extrapolated_costs(cfg, shape, mesh, *, psum_strategy, remat,
+                       weight_mode="fsdp", flash_decode=False,
+                       seq_shard_attn=True):
+    """XLA cost analysis counts while-loop (scan) bodies ONCE regardless of
+    trip count, so per-period costs are measured from two shallow *unrolled*
+    compiles (n=1, 2) and extrapolated linearly:
+        cost(n_periods) = c1 + (c2 - c1) * (n_periods - 1)
+    plus the first-dense-layer cost measured the same way (0 vs 1 layers).
+    Collective bytes extrapolate identically (they sit in the same loop)."""
+    import dataclasses
+
+    def measure(c):
+        jitted, args = build_jitted(c, shape, mesh,
+                                    psum_strategy=psum_strategy, remat=remat,
+                                    donate=False, weight_mode=weight_mode,
+                                    flash_decode=flash_decode,
+                                    seq_shard_attn=seq_shard_attn)
+        with mesh:
+            comp = jitted.lower(*args).compile()
+        cost = comp.cost_analysis()
+        colls = RA.collective_bytes(comp.as_text())
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "colls": colls}
+
+    import dataclasses as _dc
+    shallow1, shallow2 = _shallow(cfg, 1), _shallow(cfg, 2)
+    if shape.kind == "decode" and shape.seq_len >= (1 << 17):
+        # 500k-context decode: 512 unrolled 1k-chunks make XLA crawl; for
+        # sq=1 the chunk width is free (scores are (1, chunk)) — use 32k
+        # chunks = 16 unrolled steps, same totals
+        shallow1 = _dc.replace(shallow1, attn_chunk=32768)
+        shallow2 = _dc.replace(shallow2, attn_chunk=32768)
+    c1 = measure(shallow1)
+    c2 = measure(shallow2)
+    n = cfg.n_periods
+
+    def lin(a, b):
+        return a + (b - a) * (n - 1)
+
+    flops = lin(c1["flops"], c2["flops"])
+    hbm = lin(c1["bytes"], c2["bytes"])
+    kinds = set(c1["colls"]) | set(c2["colls"])
+    colls = {k: lin(c1["colls"].get(k, 0), c2["colls"].get(k, 0))
+             for k in kinds}
+    if cfg.first_dense_layers:
+        # one more compile with the dense head layer included
+        cfd = dataclasses.replace(_shallow(cfg, 1),
+                                  first_dense_layers=cfg.first_dense_layers,
+                                  first_dense_ff=cfg.first_dense_ff)
+        cd = measure(cfd)
+        flops += cd["flops"] - c1["flops"]
+        hbm += cd["bytes"] - c1["bytes"]
+        for k in set(cd["colls"]) | set(colls):
+            colls[k] = colls.get(k, 0) + cd["colls"].get(k, 0) - c1["colls"].get(k, 0)
+    return flops, hbm, colls
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             psum_strategy: str = "active", remat: str = "full",
+             tag: str = "", weight_mode: str = "fsdp",
+             flash_decode: bool = False, microbatches: int | None = None,
+             seq_shard_attn: bool = True) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if microbatches is not None:
+        cfg = dataclasses.replace(cfg, train_microbatches=microbatches)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+    jitted, args = build_jitted(cfg, shape, mesh, psum_strategy=psum_strategy,
+                                remat=remat, weight_mode=weight_mode,
+                                flash_decode=flash_decode,
+                                seq_shard_attn=seq_shard_attn)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+    flops, hbm, colls = extrapolated_costs(cfg, shape, mesh,
+                                           psum_strategy=psum_strategy,
+                                           remat=remat,
+                                           weight_mode=weight_mode,
+                                           flash_decode=flash_decode,
+                                           seq_shard_attn=seq_shard_attn)
+    roof = RA.Roofline(flops=flops, hbm_bytes=hbm,
+                       coll_bytes=float(sum(colls.values())),
+                       coll_breakdown=colls)
+    mf = RA.model_flops(cfg, shape, n_dev)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": n_dev, "psum_strategy": psum_strategy, "remat": remat,
+        "weight_mode": weight_mode, "flash_decode": flash_decode,
+        "microbatches": cfg.train_microbatches,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes,
+        },
+        "roofline": roof.as_dict(),
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / max(roof.flops, 1.0),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--psum", default="active", choices=["active", "passive"])
+    ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--weights", default="fsdp", choices=["fsdp", "zero2"])
+    ap.add_argument("--flash-decode", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (applicable_shapes(cfg) if args.all or not args.shape
+                  else [args.shape])
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                suffix = f"__{args.tag}" if args.tag else ""
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"SKIP {arch} {shape_name} {mesh_kind}")
+                    continue
+                label = f"{arch:<24} {shape_name:<12} {mesh_kind}"
+                try:
+                    rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                                   psum_strategy=args.psum, remat=args.remat,
+                                   tag=args.tag, weight_mode=args.weights,
+                                   flash_decode=args.flash_decode,
+                                   microbatches=args.microbatches)
+                    r = rec["roofline"]
+                    print(f"OK   {label} compile={rec['compile_s']:.0f}s "
+                          f"peak={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+                          f"tc={r['t_compute']:.3e} tm={r['t_memory']:.3e} "
+                          f"tx={r['t_collective']:.3e} bound={r['bottleneck']}"
+                          f" useful={rec['useful_ratio']:.2f}", flush=True)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((label, repr(e)))
+                    print(f"FAIL {label}: {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for label, err in failures:
+            print(f"  {label}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+smoke tests and benchmarks see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model); the pod axis composes
+    with data for DP/FSDP (or carries pipeline stages, see runtime/pipeline)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 4, pod: int | None = None):
+    """Small mesh for CI tests (requires xla_force_host_platform_device_count
+    set in the test's subprocess)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

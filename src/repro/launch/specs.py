@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation. The dry-run lowers against these."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models.transformer import init_caches, init_lm
+from repro.optim import adamw
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def extra_input_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    extras = {}
+    if cfg.encoder is not None:
+        extras["frames"] = _sds((batch, seq, cfg.encoder.frontend_dim), cfg.dtype)
+    if cfg.n_vision_tokens:
+        extras["vision_ctx"] = _sds((batch, cfg.n_vision_tokens, cfg.d_model),
+                                    cfg.dtype)
+    return extras
+
+
+def mem_len_for(cfg: ArchConfig, seq: int) -> int:
+    if cfg.encoder is not None:
+        return seq
+    if cfg.n_vision_tokens:
+        return cfg.n_vision_tokens
+    return 0
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+    if shape.kind in ("train", "prefill"):
+        specs.update(extra_input_specs(cfg, b, s))
+    return specs
+
+
+def params_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def opt_specs(cfg: ArchConfig):
+    return jax.eval_shape(adamw.init, params_specs(cfg))
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeCfg):
+    return jax.eval_shape(lambda: init_caches(
+        cfg, shape.global_batch, shape.seq_len,
+        mem_len_for(cfg, shape.seq_len)))
+
+
+def decode_token_spec(shape: ShapeCfg):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    """Everything the step function for this (arch, shape) consumes."""
+    out = {"params": params_specs(cfg)}
+    if shape.kind == "train":
+        out["opt_state"] = opt_specs(cfg)
+        out["batch"] = batch_specs(cfg, shape)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_specs(cfg, shape)
+    else:  # decode
+        out["caches"] = cache_specs(cfg, shape)
+        out["token"] = decode_token_spec(shape)
+    return out

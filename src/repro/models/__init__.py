@@ -1,0 +1,1 @@
+"""Model substrate: functional layer library, MoE, SSD, assembly, steps."""

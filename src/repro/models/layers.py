@@ -1,0 +1,410 @@
+"""Core layer library: norms, rotary embeddings, dense/GQA/MQA attention with
+KV caches, MLA (DeepSeek latent attention, incl. the absorbed decode form),
+cross-attention, and gated MLPs.
+
+All modules are functional: ``*_init(key, ...) -> params dict`` and
+``*_apply(params, x, ...) -> y``. Parameters are plain nested dicts so the
+sharding rules (repro/sharding/rules.py) can pattern-match on paths.
+
+Attention uses ``chunked_attention`` — a pure-JAX online-softmax scan over KV
+blocks. This is the paper's active-accumulation principle at the XLA level
+(the running (m, l, acc) partial sums stay in registers/VMEM; S = QK^T is
+never materialized at full length), and it is what makes prefill_32k fit.
+The Pallas kernel in repro/kernels/flash_attention.py is the TPU-native
+version of the same schedule.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+# --------------------------------------------------------------------- basics
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, dtype, kind: str = "rmsnorm") -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- rope
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rope_dim: int | None = None) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S). Rotates the first
+    ``rope_dim`` dims (full head by default)."""
+    hd = x.shape[-1]
+    rd = rope_dim or hd
+    freqs = theta ** (-jnp.arange(0, rd, 2, dtype=jnp.float32) / rd)  # (rd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    rot = rot.reshape(x.shape[:-1] + (rd,)).astype(x.dtype)
+    return jnp.concatenate([rot, x[..., rd:]], -1) if rd < hd else rot
+
+
+def _tp_size(parallel) -> int:
+    sizes = dict(zip(parallel.mesh.axis_names, parallel.mesh.devices.shape))
+    return sizes.get(parallel.tp_axis, 1)
+
+
+# ----------------------------------------------------- chunked (online) attn
+def _seq_shard(t: jax.Array, parallel, axis: int) -> jax.Array:
+    """Sequence-parallel anchor: shard `axis` (a query-sequence dim) over the
+    tp axis. Uniform across head counts (GQA kv-heads rarely divide TP=16),
+    this is how attention compute splits 256 ways: batch x data, seq x model.
+    No-op when the dim does not divide the axis (e.g. decode sq=1)."""
+    if parallel is None or not getattr(parallel, "seq_shard_attn", True):
+        return t
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(zip(parallel.mesh.axis_names, parallel.mesh.devices.shape))
+    tp = sizes.get(parallel.tp_axis, 1)
+    if tp <= 1 or t.shape[axis] % tp or t.shape[axis] < tp:
+        return t
+    spec = [None] * t.ndim
+    spec[0] = parallel.dp_axes
+    spec[axis] = parallel.tp_axis
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(parallel.mesh, P(*spec)))
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_offset: jax.Array | int = 0,
+                      kv_valid_len: jax.Array | None = None,
+                      chunk: int = 1024, parallel=None,
+                      unroll: bool = False) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D), Hq % Hkv == 0 (GQA via logical
+    grouping — kv heads are never materialized per q head).
+    q_offset: absolute position of q[0] (decode: cache position).
+    kv_valid_len: mask kv positions >= this (cache tail).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) / math.sqrt(d)
+    qg = _seq_shard(qg, parallel, axis=3)
+    chunk = min(chunk, skv)
+    n_chunks = math.ceil(skv / chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = jnp.asarray(skv, jnp.int32)
+    kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(sq)
+
+    def step(carry, inp):
+        acc, m_run, l_run = carry
+        ci, kb, vb = inp  # kb/vb: (B, Hkv, chunk, D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(jnp.float32))
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if kv_valid_len is not None:
+            mask &= k_pos[None, :] < kv_valid_len
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m_run, s.max(-1, keepdims=True))
+        # guard fully-masked rows (m == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(jnp.minimum(m_run - m_safe, 0.0))
+        alpha = jnp.where(jnp.isfinite(m_run), alpha, 0.0)
+        l_new = l_run * alpha + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                           vb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    init = (jnp.zeros((b, hkv, g, sq, dv), jnp.float32),
+            jnp.full((b, hkv, g, sq, 1), -jnp.inf, jnp.float32),
+            jnp.zeros((b, hkv, g, sq, 1), jnp.float32))
+    if n_chunks == 1:
+        (acc, _, l), _ = step(init, (jnp.int32(0), kc[0], vc[0]))
+    elif unroll:
+        # dry-run cost compiles: XLA counts while bodies once; the unrolled
+        # chunk loop is the same schedule in straight-line HLO
+        carry = init
+        for ci in range(n_chunks):
+            carry, _ = step(carry, (jnp.int32(ci), kc[ci], vc[ci]))
+        acc, _, l = carry
+    else:
+        (acc, _, l), _ = jax.lax.scan(
+            step, init, (jnp.arange(n_chunks, dtype=jnp.int32), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ attention
+def attn_init(key, cfg, cross: bool = False) -> Params:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dt, cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, hkv * hd, dt, cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, hkv * hd, dt, cfg.qkv_bias),
+        "wo": dense_init(ks[3], hq * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd, dt)
+        p["k_norm"] = norm_init(hd, dt)
+    if cross:
+        p["gate"] = jnp.zeros((), dt)  # llama-3.2-vision tanh gate
+    return p
+
+
+def init_kv_cache(cfg, batch: int, max_len: int) -> Params:
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros((batch, max_len, hkv, hd), dt),
+            "v": jnp.zeros((batch, max_len, hkv, hd), dt)}
+
+
+def init_cross_cache(cfg, batch: int, mem_len: int) -> Params:
+    """Cross-attention KV computed once from the (encoder/vision) memory."""
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros((batch, mem_len, hkv, hd), dt),
+            "v": jnp.zeros((batch, mem_len, hkv, hd), dt)}
+
+
+def attn_apply(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
+               cache: Params | None = None,
+               cache_pos: jax.Array | None = None,
+               memory: jax.Array | None = None, cross: bool = False,
+               causal: bool = True, chunk: int = 1024,
+               parallel=None, unroll: bool = False) -> tuple[jax.Array, Params | None]:
+    """Self- or cross-attention with optional KV cache.
+
+    x: (B, S, d). Cross-attention (cross=True): KV comes from `memory`
+    (B, Sm, d) when given (train/prefill — stored into the cache), else from
+    the cache (decode: the cross KV was precomputed at prefill).
+    Returns (out, updated_cache).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(p["wq"], x).reshape(b, s, hq, hd)
+    if cross:  # kv from encoder/vision memory
+        if memory is not None:
+            sm = memory.shape[1]
+            kh = dense(p["wk"], memory).reshape(b, sm, hkv, hd)
+            vh = dense(p["wv"], memory).reshape(b, sm, hkv, hd)
+            new_cache = ({"k": kh, "v": vh} if cache is not None else None)
+        else:
+            assert cache is not None, "cross decode needs prefilled cross KV"
+            kh, vh = cache["k"], cache["v"]
+            new_cache = cache
+        kv_valid = None
+        q_off = 0
+        causal = False
+    else:
+        k = dense(p["wk"], x).reshape(b, s, hkv, hd)
+        v = dense(p["wv"], x).reshape(b, s, hkv, hd)
+        if cfg.qk_norm:
+            q = norm_apply(p["q_norm"], q, cfg.norm_eps)
+            k = norm_apply(p["k_norm"], k, cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if cache is not None:
+            pos = jnp.asarray(cache_pos, jnp.int32)
+            if (s == 1 and parallel is not None
+                    and getattr(parallel, "flash_decode", False)
+                    and cache["k"].shape[1] % _tp_size(parallel) == 0):
+                # flash-decoding: local cache write + active partial-softmax
+                # combine across the sequence-sharded cache (shard_map)
+                from repro.sharding.flash_decode import flash_decode_attention
+                out, ck, cv = flash_decode_attention(
+                    q, cache["k"], cache["v"], k, v, pos, parallel)
+                out = out.reshape(b, s, hq * hd)
+                out = dense(p["wo"], out)
+                return out, {"k": ck, "v": cv}
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            kh, vh = ck, cv
+            kv_valid = pos + s
+            q_off = pos
+        else:
+            kh, vh = k, v
+            new_cache = None
+            kv_valid = None
+            q_off = 0
+    out = chunked_attention(
+        q.transpose(0, 2, 1, 3), kh.transpose(0, 2, 1, 3),
+        vh.transpose(0, 2, 1, 3), causal=causal, q_offset=q_off,
+        kv_valid_len=kv_valid, chunk=chunk, parallel=parallel, unroll=unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = dense(p["wo"], out)
+    if "gate" in p:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out, new_cache
+
+
+# ------------------------------------------------------------------------ MLA
+def mla_init(key, cfg) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * (m.qk_nope + m.qk_rope), dt),
+        "wkv_a": dense_init(ks[1], d, m.kv_lora + m.qk_rope, dt),
+        "kv_norm": norm_init(m.kv_lora, dt),
+        "wkv_b": dense_init(ks[2], m.kv_lora, h * (m.qk_nope + m.v_head), dt),
+        "wo": dense_init(ks[3], h * m.v_head, d, dt),
+    }
+
+
+def init_mla_cache(cfg, batch: int, max_len: int) -> Params:
+    m = cfg.mla
+    dt = jnp.dtype(cfg.dtype)
+    # the MLA win: cache only the latent + shared rope key
+    return {"latent": jnp.zeros((batch, max_len, m.kv_lora), dt),
+            "k_pe": jnp.zeros((batch, max_len, m.qk_rope), dt)}
+
+
+def mla_apply(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
+              cache: Params | None = None,
+              cache_pos: jax.Array | None = None, chunk: int = 1024,
+              parallel=None, unroll: bool = False) -> tuple[jax.Array, Params | None]:
+    """DeepSeek-V2 multi-head latent attention. Prefill/train uses the
+    expanded form; single-token decode uses the *absorbed* form (q absorbed
+    into the latent space) so per-step work is O(S * kv_lora), never
+    materializing per-head keys for the whole cache."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q = dense(p["wq"], x).reshape(b, s, h, m.qk_nope + m.qk_rope)
+    q_nope, q_pe = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    kv_a = dense(p["wkv_a"], x)
+    latent = norm_apply(p["kv_norm"], kv_a[..., :m.kv_lora], cfg.norm_eps)
+    k_pe = apply_rope(kv_a[..., None, m.kv_lora:], positions, cfg.rope_theta)
+    k_pe = k_pe[..., 0, :]  # (B, S, rope)
+
+    new_cache = None
+    if cache is not None:
+        pos = jnp.asarray(cache_pos, jnp.int32)
+        cl = jax.lax.dynamic_update_slice(cache["latent"], latent, (0, pos, 0))
+        cp = jax.lax.dynamic_update_slice(cache["k_pe"], k_pe, (0, pos, 0))
+        new_cache = {"latent": cl, "k_pe": cp}
+        latent_all, k_pe_all = cl, cp
+        kv_valid = pos + s
+        q_off = pos
+        s_kv = cache["latent"].shape[1]
+    else:
+        latent_all, k_pe_all = latent, k_pe
+        kv_valid = None
+        q_off = 0
+        s_kv = s
+
+    wkv_b = p["wkv_b"]["w"].reshape(m.kv_lora, h, m.qk_nope + m.v_head)
+    w_bk, w_bv = wkv_b[..., :m.qk_nope], wkv_b[..., m.qk_nope:]
+
+    if s == 1 and cache is not None:
+        # absorbed decode: score = (q_nope W_bk^T) . latent + q_pe . k_pe
+        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                           w_bk.astype(jnp.float32))  # (B,1,H,kv_lora)
+        q_full = jnp.concatenate([q_abs, q_pe.astype(jnp.float32)], -1)
+        # chunked_attention scales by 1/sqrt(q_dim); MLA's true scale is
+        # 1/sqrt(qk_nope + qk_rope) — pre-scale q to compensate.
+        q_full = q_full * (math.sqrt(m.kv_lora + m.qk_rope)
+                           / math.sqrt(m.qk_nope + m.qk_rope))
+        k_full = jnp.concatenate([latent_all, k_pe_all], -1)  # (B,S,lora+rope)
+        out = chunked_attention(
+            q_full.transpose(0, 2, 1, 3).astype(x.dtype),
+            k_full[:, None].astype(x.dtype),   # (B, 1 kv head, S, lora+rope)
+            latent_all[:, None],               # values = latent
+            causal=True, q_offset=q_off, kv_valid_len=kv_valid, chunk=chunk,
+            parallel=parallel, unroll=unroll)
+        # out: (B, H, 1, kv_lora) -> expand through W_bv
+        ctx = jnp.einsum("bhsl,lhv->bshv", out.astype(jnp.float32),
+                         w_bv.astype(jnp.float32))
+        out_v = ctx.reshape(b, s, h * m.v_head).astype(x.dtype)
+    else:
+        k_nope_v = jnp.einsum("bsl,lhe->bshe", latent_all.astype(jnp.float32),
+                              wkv_b.astype(jnp.float32))
+        k_nope = k_nope_v[..., :m.qk_nope]
+        v = k_nope_v[..., m.qk_nope:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe_all[:, :, None],
+                                      (b, s_kv, h, m.qk_rope)).astype(jnp.float32)], -1)
+        q_full = jnp.concatenate([q_nope.astype(jnp.float32),
+                                  q_pe.astype(jnp.float32)], -1)
+        out = chunked_attention(
+            q_full.transpose(0, 2, 1, 3).astype(x.dtype),
+            k_full.transpose(0, 2, 1, 3).astype(x.dtype),
+            v.transpose(0, 2, 1, 3).astype(x.dtype),
+            causal=True, q_offset=q_off, kv_valid_len=kv_valid, chunk=chunk,
+            parallel=parallel)
+        out_v = out.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head)
+    return dense(p["wo"], out_v), new_cache
+
+
+# ------------------------------------------------------------------------ MLP
+def mlp_init(key, d: int, ff: int, dtype, gated: bool = True,
+             prefix: str = "") -> Params:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(dtype)
+    p = {"wi": dense_init(ks[0], d, ff, dt), "wo": dense_init(ks[1], ff, d, dt)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, ff, dt)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = dense(p["wi"], x)
+    if "wg" in p:
+        h = ACTS[act](dense(p["wg"], x)) * h
+    else:
+        h = ACTS[act](h)
+    return dense(p["wo"], h)

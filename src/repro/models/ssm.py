@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked matmul formulation.
+
+The chunked SSD algorithm *is* a partial-sum partitioning scheme in the
+paper's sense: the sequence is tiled into chunks; each chunk produces a
+partial state (the partial sum), combined across chunks by a sequential
+recurrence whose accumulator stays on-chip (lax.scan carry = the active
+accumulation), while the intra-chunk work is dense MXU matmuls. We document
+this correspondence in DESIGN.md §3.
+
+Jamba officially uses Mamba-1; we use the Mamba-2 SSD form of the same SSM
+(scalar-times-identity A) because SSD is the MXU-friendly, TPU-native
+formulation — a documented hardware adaptation.
+
+Functional params like layers.py. Decode keeps O(1) state:
+(conv_state (B, d_conv-1, conv_dim), ssm_state (B, h, p, n)).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense, dense_init, norm_apply, norm_init
+
+
+def _dims(cfg):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    conv_dim = d_inner + 2 * sc.n_groups * sc.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, cfg) -> Params:
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "wx": dense_init(ks[0], d, d_inner, dt),
+        "wz": dense_init(ks[1], d, d_inner, dt),
+        "wbc": dense_init(ks[2], d, 2 * sc.n_groups * sc.d_state, dt),
+        "wdt": dense_init(ks[3], d, h, dt),
+        "conv_w": jax.random.normal(ks[4], (sc.d_conv, conv_dim), dt)
+                  * (1.0 / math.sqrt(sc.d_conv)),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), math.log(math.e ** 0.01 - 1.0), jnp.float32),
+        "out_norm": norm_init(d_inner, dt),
+        "wo": dense_init(ks[5], d_inner, d, dt),
+    }
+
+
+def init_ssm_cache(cfg, batch: int) -> Params:
+    sc = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {"conv": jnp.zeros((batch, sc.d_conv - 1, conv_dim), dt),
+            "ssm": jnp.zeros((batch, h, sc.head_dim, sc.d_state), jnp.float32)}
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u: (B, S, C); w: (K, C) depthwise causal conv via shifted adds."""
+    kk = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (kk - 1, 0), (0, 0)))
+    s = u.shape[1]
+    y = sum(up[:, i:i + s] * w[i] for i in range(kk))
+    return jax.nn.silu(y + b)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., L) -> (..., L, L) with out[i,j] = sum_{j<t<=i} x[t], -inf for
+    j > i (strictly causal cumulative segment sums)."""
+    ll = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((ll, ll), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a_dt: jax.Array, b_mat: jax.Array,
+                c_mat: jax.Array, chunk: int,
+                init_state: jax.Array | None = None,
+                unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:    (B, S, H, P)   (already multiplied by dt)
+    a_dt: (B, S, H)      (dt * A, negative)
+    b_mat,c_mat: (B, S, G, N), heads grouped (H % G == 0)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bb, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    lc = min(chunk, s)
+    pad = (-s) % lc
+    if pad:
+        # zero-pad to a chunk multiple: padded steps have x=0 (no state
+        # contribution) and a_dt=0 (decay factor 1), so the final state and
+        # the first `s` outputs are unchanged.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    c = s_pad // lc
+
+    xr = x.reshape(bb, c, lc, h, p)
+    ar = a_dt.reshape(bb, c, lc, h).transpose(0, 3, 1, 2)      # (B,H,C,L)
+    br = b_mat.reshape(bb, c, lc, g, n)
+    cr = c_mat.reshape(bb, c, lc, g, n)
+    del x, a_dt, b_mat, c_mat
+    a_cs = jnp.cumsum(ar, -1)                                   # (B,H,C,L)
+
+    # 1) intra-chunk (dense MXU work)
+    ll = jnp.exp(_segsum(ar))                                   # (B,H,C,L,L)
+    # scores: C_i . B_j within chunk, grouped heads
+    cb = jnp.einsum("bclgn,bcsgn->bcgls", cr, br)               # (B,C,G,L,L)
+    cb = jnp.repeat(cb, rep, axis=2)                            # (B,C,H,L,L)
+    att = cb * ll.transpose(0, 2, 1, 3, 4)                      # (B,C,H,L,L)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", att, xr)
+
+    # 2) per-chunk partial states (the partial sums)
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)               # (B,H,C,L)
+    brh = jnp.repeat(br, rep, axis=3)                           # (B,C,L,H,N)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn",
+                        brh, decay_states, xr)
+    # 3) inter-chunk recurrence — the active accumulator across chunk grid
+    chunk_decay = jnp.exp(a_cs[..., -1])                        # (B,H,C)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                           # (B,H,P,N),(B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    st0 = (jnp.zeros((bb, h, p, n), jnp.float32) if init_state is None
+           else init_state)
+    xs = (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+          chunk_decay.transpose(2, 0, 1))
+    if unroll:
+        carry, prevs = st0, []
+        for ci in range(c):
+            carry, prev = scan_fn(carry, jax.tree.map(lambda t: t[ci], xs))
+            prevs.append(prev)
+        final, prev_states = carry, jnp.stack(prevs)
+    else:
+        final, prev_states = jax.lax.scan(scan_fn, st0, xs)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,C,H,P,N)
+
+    # 4) contribution of carried state into each chunk position
+    state_decay = jnp.exp(a_cs)                                 # (B,H,C,L)
+    crh = jnp.repeat(cr, rep, axis=3)                           # (B,C,L,H,N)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", crh,
+                       prev_states.astype(xr.dtype), state_decay)
+    y = (y_diag + y_off).reshape(bb, s_pad, h, p)[:, :s]
+    return y, final
+
+
+def mamba_apply(p: Params, x: jax.Array, cfg, *, cache: Params | None = None,
+                unroll: bool = False) -> tuple[jax.Array, Params | None]:
+    """x: (B, S, d). Train/prefill: chunked SSD. Decode (S==1 with cache):
+    O(1) recurrent update."""
+    sc = cfg.ssm
+    bb, s, _ = x.shape
+    d_inner, h, conv_dim = _dims(cfg)
+    g, n, pdim = sc.n_groups, sc.d_state, sc.head_dim
+
+    xin = dense(p["wx"], x)
+    z = dense(p["wz"], x)
+    bc = dense(p["wbc"], x)
+    dt_raw = dense(p["wdt"], x).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                 # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                    # (H,)
+
+    u = jnp.concatenate([xin, bc], -1)                          # (B,S,conv_dim)
+    new_cache = None
+    if cache is not None and s == 1:
+        # decode: conv from rolling state, recurrent SSD update
+        window = jnp.concatenate([cache["conv"], u], 1)         # (B, K, C)
+        conv_out = jax.nn.silu(
+            (window * p["conv_w"]).sum(1) + p["conv_b"])[:, None]
+        new_conv = window[:, 1:]
+        xc = conv_out[..., :d_inner].reshape(bb, 1, h, pdim)
+        bcc = conv_out[..., d_inner:]
+        b_m = bcc[..., :g * n].reshape(bb, 1, g, n)
+        c_m = bcc[..., g * n:].reshape(bb, 1, g, n)
+        x_dt = (xc.astype(jnp.float32) * dt[..., None])[:, 0]   # (B,H,P)
+        dec = jnp.exp(dt[:, 0] * a)                             # (B,H)
+        b_h = jnp.repeat(b_m[:, 0], h // g, axis=1)             # (B,H,N)
+        c_h = jnp.repeat(c_m[:, 0], h // g, axis=1)
+        st = (cache["ssm"] * dec[..., None, None]
+              + jnp.einsum("bhp,bhn->bhpn", x_dt, b_h.astype(jnp.float32)))
+        y = jnp.einsum("bhpn,bhn->bhp", st, c_h.astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xc[:, 0].astype(jnp.float32)
+        y = y[:, None].reshape(bb, 1, h, pdim)
+        new_cache = {"conv": new_conv, "ssm": st}
+    else:
+        conv_out = _causal_conv(u, p["conv_w"], p["conv_b"])
+        xc = conv_out[..., :d_inner].reshape(bb, s, h, pdim)
+        bcc = conv_out[..., d_inner:]
+        b_m = bcc[..., :g * n].reshape(bb, s, g, n)
+        c_m = bcc[..., g * n:].reshape(bb, s, g, n)
+        x_dt = xc.astype(jnp.float32) * dt[..., None]
+        y, final = ssd_chunked(x_dt.astype(x.dtype), dt * a, b_m, c_m, sc.chunk,
+                               unroll=unroll)
+        y = y.astype(jnp.float32) + p["D"][None, None, :, None] * xc.astype(jnp.float32)
+        if cache is not None:  # prefill: materialize decode state
+            k = sc.d_conv - 1
+            new_cache = {"conv": u[:, -k:], "ssm": final}
+    y = y.reshape(bb, s, d_inner).astype(x.dtype)
+    y = norm_apply(p["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["wo"], y), new_cache

@@ -1,0 +1,145 @@
+"""Step factories: train_step / prefill_step / decode_step for every arch.
+
+These are the functions the launcher jits (and the dry-run lowers): they take
+and return sharded pytrees only; all distribution decisions live in
+sharding/rules.py + the Parallel context.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import encode, forward, init_caches, init_lm
+from repro.optim import adamw
+
+Z_LOSS = 1e-4
+
+
+def _memory_from_batch(cfg: ArchConfig, params, batch, parallel):
+    """Resolve the cross-attention memory for vlm/enc-dec archs."""
+    if cfg.encoder is not None:
+        return encode(params, cfg, batch["frames"], parallel)
+    if cfg.n_vision_tokens:
+        return batch["vision_ctx"]
+    return None
+
+
+def lm_loss(params, cfg: ArchConfig, batch, parallel=None):
+    """Next-token cross-entropy (+ z-loss + MoE aux). tokens/labels: (B, S).
+
+    The label score is a one-hot contraction (not a gather): with the vocab
+    dim sharded over the tp axis, both logsumexp and the contraction reduce
+    locally and combine partials with a psum — the active-accumulation
+    pattern — whereas a gather on the sharded dim can force the partitioner
+    to all-gather the (tokens, vocab) logits (hundreds of GiB at scale)."""
+    memory = _memory_from_batch(cfg, params, batch, parallel)
+    logits, _, aux = forward(params, cfg, batch["tokens"], memory=memory,
+                             parallel=parallel)
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), -1)) + m[..., 0]  # (B, S)
+    onehot = jax.nn.one_hot(batch["labels"], cfg.padded_vocab,
+                        dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = jnp.sum((lse - label_logit) * mask) / denom
+    zl = Z_LOSS * jnp.sum(jnp.square(lse) * mask) / denom
+    loss = ce + zl + aux
+    return loss, {"ce": ce, "z_loss": zl, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, parallel=None,
+                    microbatches: int | None = None):
+    """Training step with gradient accumulation: the global batch is split
+    into `microbatches` sequential slices (lax.scan), gradients accumulate in
+    fp32 sharded like the params. This bounds the activation working set —
+    mandatory for the 1M-token global steps of the big assigned archs."""
+    mb = microbatches if microbatches is not None else cfg.train_microbatches
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch, parallel), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        b = batch["tokens"].shape[0]
+        # smoke/CI batches may be smaller than the configured accumulation
+        mb_eff = mb if (mb > 1 and b % mb == 0) else 1
+        if mb_eff <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda t: t.reshape((mb_eff, t.shape[0] // mb_eff)
+                                    + t.shape[1:]), batch)
+
+            def body(acc, mbatch):
+                (l, pp), g = grad_fn(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return acc, (l, pp)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, (losses, parts_stack) = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / mb_eff, gsum)
+            loss = losses.mean()
+            parts = jax.tree.map(lambda t: t.mean(), parts_stack)
+        new_params, new_opt, stats = adamw.update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics = {"loss": loss, **parts, **stats}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int, parallel=None):
+    """Full-sequence forward that populates the caches and returns the last
+    token's logits (sampling seed)."""
+    def prefill_step(params, batch):
+        b, s = batch["tokens"].shape
+        mem_len = _mem_len(cfg, batch)
+        caches = init_caches(cfg, b, max_len, mem_len)
+        memory = _memory_from_batch(cfg, params, batch, parallel)
+        logits, caches, _ = forward(params, cfg, batch["tokens"],
+                                    caches=caches, memory=memory,
+                                    parallel=parallel)
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, parallel=None):
+    """One-token decode against a populated cache (cross-KV already cached,
+    so no memory input is needed)."""
+    def decode_step(params, caches, token):
+        logits, caches, _ = forward(params, cfg, token, caches=caches,
+                                    memory=None, parallel=parallel)
+        return logits[:, -1], caches
+
+    return decode_step
+
+
+def _mem_len(cfg: ArchConfig, batch) -> int:
+    if cfg.encoder is not None:
+        return batch["frames"].shape[1]
+    if cfg.n_vision_tokens:
+        return batch["vision_ctx"].shape[1]
+    return 0
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt: jax.Array,
+                    steps: int, max_len: int, parallel=None) -> jax.Array:
+    """Reference sampling loop used by tests/examples (prefill + N decodes)."""
+    prefill = jax.jit(make_prefill_step(cfg, max_len, parallel))
+    decode = jax.jit(make_decode_step(cfg, parallel))
+    logits, caches = prefill(params, {"tokens": prompt})
+    toks = [jnp.argmax(logits, -1)[:, None]]
+    for _ in range(steps - 1):
+        logits, caches = decode(params, caches, toks[-1])
+        toks.append(jnp.argmax(logits, -1)[:, None])
+    return jnp.concatenate(toks, 1)

@@ -1,0 +1,359 @@
+"""Model assembly: decoder-only LMs, hybrid (jamba), cross-attn-interleaved
+(llama-vision) and encoder-decoder (seamless) from a periodic sublayer layout.
+
+The layer stack is ``n_periods`` repetitions of ``cfg.period_layout``;
+parameters are stacked over periods and the stack is executed with
+``jax.lax.scan``, so the lowered HLO contains ONE period regardless of depth
+(critical for 100-layer dry-run compiles). Heterogeneous periods (jamba's
+8-sublayer block, llama-vision's 4-self+1-cross group) unroll statically
+*inside* the scanned body.
+
+KV caches / SSM states mirror the same structure: a pytree stacked over
+periods, consumed and re-emitted through the scan.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Params = dict[str, Any]
+
+
+def _constrain(x: jax.Array, parallel) -> jax.Array:
+    """Anchor activation sharding: batch over the dp axes, rest replicated
+    (feature-dim shardings propagate from the weights). Without this, the
+    embedding gather (vocab sharded over the fsdp axis) can win sharding
+    propagation and leave activations batch-replicated — hundreds of GiB at
+    production scale."""
+    if parallel is None:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    spec = P(parallel.dp_axes, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(parallel.mesh, spec))
+
+
+def _constrain_logits(x: jax.Array, parallel) -> jax.Array:
+    """Logits: batch over dp, vocab over tp. Without this the tied-embedding
+    head can leave the (tokens, vocab) fp32 logits replicated over the model
+    axis — tens of GiB per device at a 150k vocab."""
+    if parallel is None:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(zip(parallel.mesh.axis_names, parallel.mesh.devices.shape))
+    tp = parallel.tp_axis if x.shape[-1] % sizes.get(parallel.tp_axis, 1) == 0 \
+        else None
+    spec = P(parallel.dp_axes, *(None,) * (x.ndim - 2), tp)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(parallel.mesh, spec))
+
+
+# ------------------------------------------------------------------ sublayers
+def _sublayer_init(key, cfg: ArchConfig, mixer: str, ffn: str,
+                   dense_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {"norm1": L.norm_init(cfg.d_model, dt, cfg.norm)}
+    if mixer == "mamba":
+        p["mamba"] = S.mamba_init(ks[0], cfg)
+    elif mixer == "cross":
+        p["cross"] = L.attn_init(ks[0], cfg, cross=True)
+    elif mixer == "attn+cross":
+        p["attn"] = (L.mla_init(ks[0], cfg) if cfg.mla else
+                     L.attn_init(ks[0], cfg))
+        p["norm_cross"] = L.norm_init(cfg.d_model, dt, cfg.norm)
+        p["cross"] = L.attn_init(ks[3], cfg, cross=True)
+    else:  # attn
+        p["attn"] = (L.mla_init(ks[0], cfg) if cfg.mla else
+                     L.attn_init(ks[0], cfg))
+    if ffn == "dense":
+        p["norm2"] = L.norm_init(cfg.d_model, dt, cfg.norm)
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, dense_ff or cfg.d_ff, dt,
+                              gated=cfg.gated_mlp)
+    elif ffn == "moe":
+        p["norm2"] = L.norm_init(cfg.d_model, dt, cfg.norm)
+        p["moe"] = M.moe_init(ks[1], cfg)
+    return p
+
+
+def _sublayer_cache(cfg: ArchConfig, mixer: str, batch: int, max_len: int,
+                    mem_len: int = 0) -> Params | None:
+    if mixer == "mamba":
+        return {"mamba": S.init_ssm_cache(cfg, batch)}
+    if mixer == "cross":
+        return {"cross": L.init_cross_cache(cfg, batch, mem_len)}
+    if mixer == "attn+cross":
+        self_c = (L.init_mla_cache(cfg, batch, max_len) if cfg.mla else
+                  L.init_kv_cache(cfg, batch, max_len))
+        return {"self": self_c, "cross": L.init_cross_cache(cfg, batch, mem_len)}
+    self_c = (L.init_mla_cache(cfg, batch, max_len) if cfg.mla else
+              L.init_kv_cache(cfg, batch, max_len))
+    return {"self": self_c}
+
+
+def _sublayer_apply(p: Params, x: jax.Array, cfg: ArchConfig, mixer: str,
+                    ffn: str, *, positions, cache, cache_pos, memory,
+                    causal, parallel, chunk: int) -> tuple[jax.Array, Any, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Params | None = dict(cache) if cache else None
+    h = L.norm_apply(p["norm1"], x, cfg.norm_eps)
+    if mixer == "mamba":
+        out, c = S.mamba_apply(p["mamba"], h, cfg,
+                               cache=cache["mamba"] if cache else None,
+                               unroll=cfg.unroll_scan)
+        if new_cache is not None:
+            new_cache["mamba"] = c
+    elif mixer == "cross":
+        out, c = L.attn_apply(p["cross"], h, cfg, positions=positions,
+                              cache=cache["cross"] if cache else None,
+                              memory=memory, cross=True, chunk=chunk,
+                              parallel=parallel, unroll=cfg.unroll_scan)
+        if new_cache is not None:
+            new_cache["cross"] = c
+    else:
+        apply = L.mla_apply if cfg.mla else L.attn_apply
+        out, c = apply(p["attn"], h, cfg, positions=positions,
+                       cache=cache["self"] if cache else None,
+                       cache_pos=cache_pos, parallel=parallel,
+                       unroll=cfg.unroll_scan,
+                       **({} if cfg.mla else {"causal": causal}), chunk=chunk)
+        if new_cache is not None:
+            new_cache["self"] = c
+        if mixer == "attn+cross":
+            x = x + out
+            h2 = L.norm_apply(p["norm_cross"], x, cfg.norm_eps)
+            out, c2 = L.attn_apply(p["cross"], h2, cfg, positions=positions,
+                                   cache=cache["cross"] if cache else None,
+                                   memory=memory, cross=True, chunk=chunk,
+                                   parallel=parallel, unroll=cfg.unroll_scan)
+            if new_cache is not None:
+                new_cache["cross"] = c2
+    x = x + out
+    if ffn == "dense":
+        x = x + L.mlp_apply(p["mlp"], L.norm_apply(p["norm2"], x, cfg.norm_eps),
+                            cfg.act)
+    elif ffn == "moe":
+        mo, aux = M.moe_apply(p["moe"], L.norm_apply(p["norm2"], x, cfg.norm_eps),
+                              cfg, parallel)
+        x = x + mo
+    return x, new_cache, aux
+
+
+# -------------------------------------------------------------------- periods
+def _period_init(key, cfg: ArchConfig, layout) -> Params:
+    ks = jax.random.split(key, len(layout))
+    return {f"sub{i}": _sublayer_init(ks[i], cfg, mixer, ffn)
+            for i, (mixer, ffn) in enumerate(layout)}
+
+
+def _period_apply(p: Params, x, cfg: ArchConfig, layout, *, positions,
+                  caches, cache_pos, memory, causal, parallel, chunk):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+    for i, (mixer, ffn) in enumerate(layout):
+        c = caches[f"sub{i}"] if caches is not None else None
+        x, nc, aux = _sublayer_apply(
+            p[f"sub{i}"], x, cfg, mixer, ffn, positions=positions, cache=c,
+            cache_pos=cache_pos, memory=memory, causal=causal,
+            parallel=parallel, chunk=chunk)
+        if new_caches is not None:
+            new_caches[f"sub{i}"] = nc
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+def _stack_init(key, cfg: ArchConfig, layout, n: int) -> Params:
+    ks = jax.random.split(key, n)
+    inits = [_period_init(k, cfg, layout) for k in ks]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+
+
+def _stack_cache(cfg: ArchConfig, layout, n: int, batch: int, max_len: int,
+                 mem_len: int = 0) -> Params:
+    one = {f"sub{i}": _sublayer_cache(cfg, mixer, batch, max_len, mem_len)
+           for i, (mixer, _) in enumerate(layout)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
+
+
+def _stack_apply(stack_params: Params, x, cfg: ArchConfig, layout, *,
+                 positions, caches, cache_pos, memory, causal, parallel,
+                 chunk) -> tuple[jax.Array, Params | None, jax.Array]:
+    """lax.scan over stacked periods. caches (if any) are scanned alongside
+    and re-emitted (ys) with the same stacking."""
+    remat = getattr(parallel, "remat", "full") if parallel else "none"
+
+    def body(carry, xs):
+        xx, aux_sum = carry
+        pp, cc = xs
+        xx = _constrain(xx, parallel)
+        xx, nc, aux = _period_apply(pp, xx, cfg, layout, positions=positions,
+                                    caches=cc, cache_pos=cache_pos,
+                                    memory=memory, causal=causal,
+                                    parallel=parallel, chunk=chunk)
+        xx = _constrain(xx, parallel)
+        return (xx, aux_sum + aux), nc
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    if cfg.unroll_scan:
+        # python loop (dry-run cost compiles): XLA's cost analysis counts a
+        # while-loop body once regardless of trip count; unrolled periods are
+        # counted correctly and extrapolated by launch/dryrun.py.
+        n = jax.tree.leaves(stack_params)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for i in range(n):
+            xs_i = jax.tree.map(lambda t: t[i], (stack_params, caches))
+            carry, nc = body(carry, xs_i)
+            ys.append(nc)
+        (x, aux) = carry
+        new_caches = (None if caches is None
+                      else jax.tree.map(lambda *t: jnp.stack(t), *ys))
+        return x, new_caches, aux
+
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        (stack_params, caches))
+    return x, new_caches, aux
+
+
+# ----------------------------------------------------------------- full model
+def init_lm(key, cfg: ArchConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": {"w": jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                         dt) * 0.02},
+        "final_norm": L.norm_init(cfg.d_model, dt, cfg.norm),
+        "periods": _stack_init(ks[1], cfg, cfg.period_layout, cfg.n_periods),
+    }
+    if not cfg.tie_embed:
+        p["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dt)
+    if cfg.first_dense_layers:
+        sub = jax.random.split(ks[3], cfg.first_dense_layers)
+        p["first"] = [_sublayer_init(sub[i], cfg, "attn", "dense",
+                                     dense_ff=cfg.first_dense_ff or cfg.d_ff)
+                      for i in range(cfg.first_dense_layers)]
+    if cfg.encoder:
+        enc = cfg.encoder
+        p["enc_proj"] = L.dense_init(ks[4], enc.frontend_dim, cfg.d_model, dt)
+        p["enc_periods"] = _stack_init(ks[5], cfg, (("attn", "dense"),),
+                                       enc.n_layers)
+        p["enc_norm"] = L.norm_init(cfg.d_model, dt, cfg.norm)
+    return p
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                mem_len: int = 0) -> Params:
+    caches: Params = {
+        "pos": jnp.zeros((), jnp.int32),
+        "periods": _stack_cache(cfg, cfg.period_layout, cfg.n_periods, batch,
+                                max_len, mem_len),
+    }
+    if cfg.first_dense_layers:
+        caches["first"] = [
+            _sublayer_cache(cfg, "attn", batch, max_len, mem_len)
+            for _ in range(cfg.first_dense_layers)]
+    return caches
+
+
+def encode(params: Params, cfg: ArchConfig, frames: jax.Array,
+           parallel=None, chunk: int | None = None) -> jax.Array:
+    """Encoder for enc-dec models. `frames`: stubbed modality frontend output
+    (B, S_enc, frontend_dim) — precomputed frame/patch embeddings per spec."""
+    chunk = cfg.attn_chunk if chunk is None else chunk
+    x = _constrain(L.dense(params["enc_proj"], frames), parallel)
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = _stack_apply(params["enc_periods"], x, cfg, (("attn", "dense"),),
+                           positions=positions, caches=None, cache_pos=None,
+                           memory=None, causal=False, parallel=parallel,
+                           chunk=chunk)
+    return L.norm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+            caches: Params | None = None, memory: jax.Array | None = None,
+            parallel=None, chunk: int | None = None
+            ) -> tuple[jax.Array, Params | None, jax.Array]:
+    """tokens: (B, S) int32 -> (logits (B, S, vocab), new_caches, aux_loss).
+
+    memory: encoder output (enc-dec) or stubbed vision embeddings (vlm),
+    (B, Sm, d_model)."""
+    chunk = cfg.attn_chunk if chunk is None else chunk
+    x = params["embed"]["w"][tokens]
+    x = _constrain(x, parallel)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if caches is not None:
+        pos = caches["pos"]
+        positions = pos + jnp.arange(tokens.shape[1])
+    else:
+        pos = None
+        positions = jnp.arange(tokens.shape[1])
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Params | None = {"pos": (pos + tokens.shape[1])
+                                 if caches is not None else None}
+    if cfg.first_dense_layers:
+        firsts = []
+        for i, fp in enumerate(params["first"]):
+            c = caches["first"][i] if caches is not None else None
+            x, nc, aux = _sublayer_apply(
+                fp, x, cfg, "attn", "dense", positions=positions, cache=c,
+                cache_pos=pos, memory=memory, causal=True, parallel=parallel,
+                chunk=chunk)
+            firsts.append(nc)
+            aux_total = aux_total + aux
+        if caches is not None:
+            new_caches["first"] = firsts
+
+    x, pc, aux = _stack_apply(
+        params["periods"], x, cfg, cfg.period_layout, positions=positions,
+        caches=caches["periods"] if caches is not None else None,
+        cache_pos=pos, memory=memory, causal=True, parallel=parallel,
+        chunk=chunk)
+    aux_total = aux_total + aux
+    if caches is not None:
+        new_caches["periods"] = pc
+    else:
+        new_caches = None
+
+    x = L.norm_apply(params["final_norm"], x, cfg.norm_eps)
+    x = _constrain(x, parallel)
+    head_w = (params["embed"]["w"].T if cfg.tie_embed
+              else params["lm_head"]["w"])
+    logits = x @ head_w
+    logits = _constrain_logits(logits, parallel)
+    return logits, new_caches, aux_total
+
+
+# ------------------------------------------------------------------- counting
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    routed = 0
+    for path, leaf in leaves:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if any(getattr(k, "key", None) == "routed" for k in path):
+            routed += n
+    if active_only and cfg.moe:
+        total -= round(routed * (1 - cfg.moe.top_k / cfg.moe.n_routed))
+    return total

@@ -1,0 +1,68 @@
+"""Gradient compression for cheaper data-parallel reduction.
+
+Two levels:
+  * bf16 gradients come free with mixed precision (the FSDP reduce-scatter
+    already moves 2-byte words — 2x vs fp32);
+  * int8 + error feedback (this module): per-leaf scale, quantize to int8,
+    all-reduce over the dp axes in int8 words, dequantize, and carry the
+    quantization residual into the next step (error feedback keeps the
+    compression unbiased over time — 1-bit SGD / DGC lineage).
+
+Used via shard_map around the gradient reduction in the hillclimb
+experiments; exact-math tests in tests/test_infra_compress.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_allreduce(grads: Any, error: Any, mesh, dp_axes: tuple[str, ...]
+                         ) -> tuple[Any, Any]:
+    """All-reduce grads over dp_axes in int8 with error feedback.
+
+    grads enter *sharded per-device* (each device holds its local gradient
+    contribution); returns (mean gradient, new error state).
+    """
+    def one(g, e):
+        def body(gl, el):
+            gl = gl.astype(jnp.float32) + el
+            q, scale = quantize_int8(gl)
+            new_e = gl - dequantize_int8(q, scale)
+            total = dequantize_int8(
+                jax.lax.psum(q.astype(jnp.int32), dp_axes),
+                jax.lax.pmax(scale, dp_axes))
+            n = 1
+            for a in dp_axes:
+                n *= mesh.shape[a]
+            return total / n, new_e
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P()), out_specs=(P(), P()),
+        )(g, e)
+
+    out = jax.tree.map(one, grads, error)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return mean, err

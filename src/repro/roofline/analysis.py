@@ -1,0 +1,121 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs(per-device) / PEAK_FLOPS
+  memory     = HLO_bytes(per-device) / HBM_BW
+  collective = collective_bytes(per-device HLO) / ICI_BW
+
+The SPMD-partitioned module XLA compiles *is* the per-device program, so
+cost_analysis() is already per-chip. collective_bytes is parsed from the
+compiled HLO text: the summed result sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops (async *-start ops
+counted once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline.constants import (DTYPE_BYTES, HBM_BW, ICI_BW,
+                                      PEAK_FLOPS_BF16)
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-kind byte totals (result sizes) of every collective op."""
+    out: dict[str, int] = {}
+    for shape_str, kind, _ in _COLL_RE.findall(hlo_text):
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: float            # per device
+    coll_breakdown: dict
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower bound on step time: the dominant term (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def roofline_fraction(self) -> float:
+        """How close the *compute* term is to being the binding constraint —
+        the MFU upper bound this configuration permits."""
+        return self.t_compute / self.step_time_lb
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "coll_breakdown": self.coll_breakdown,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction(),
+        }
+
+
+def analyze_compiled(compiled) -> Roofline:
+    cost = compiled.cost_analysis()
+    colls = collective_bytes(compiled.as_text())
+    return Roofline(
+        flops=float(cost.get("flops", 0.0)),
+        hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(sum(colls.values())),
+        coll_breakdown=colls)
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """MODEL_FLOPS per device: 6·N·D (train) / 2·N·D (inference), with
+    N = active params (MoE) and D = tokens processed this step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * n_active * tokens / n_devices

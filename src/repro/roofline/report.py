@@ -1,0 +1,98 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown tables for
+EXPERIMENTS.md (§Dry-run and §Roofline)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(out_dir: str = "results/dryrun", tag: str = "") -> list[dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        base = os.path.basename(fn)[:-5]
+        parts = base.split("__")
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if cell_tag != tag:
+            continue
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(cells: list[dict], mesh: str = "single") -> str:
+    rows = ["| arch | shape | t_comp | t_mem | t_coll | bound | roofline-frac "
+            "| useful (6ND/HLO) | peak GiB | note |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        r = c["roofline"]
+        note = _note(c)
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {_fmt_s(r['t_compute'])} | "
+            f"{_fmt_s(r['t_memory'])} | {_fmt_s(r['t_collective'])} | "
+            f"{r['bottleneck']} | {r['roofline_fraction']:.2f} | "
+            f"{c['useful_ratio']:.2f} | "
+            f"{c['memory']['peak_per_device']/2**30:.1f} | {note} |")
+    return "\n".join(rows)
+
+
+def _note(c: dict) -> str:
+    r = c["roofline"]
+    b = r["bottleneck"]
+    if b == "compute":
+        return "at roofline: raise arithmetic density only by algorithm change"
+    if b == "memory":
+        return "cut HBM: fuse/remat-policy/microbatch; bf16 saves"
+    return "cut collectives: reduce-scatter, overlap, shard more dims locally"
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | devices | compile s | peak GiB/dev | "
+            "coll bytes/dev | dominant collective |",
+            "|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        r = c["roofline"]
+        dom = max(r["coll_breakdown"], key=r["coll_breakdown"].get) \
+            if r["coll_breakdown"] else "-"
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['devices']} | "
+            f"{c['compile_s']:.0f} | "
+            f"{c['memory']['peak_per_device']/2**30:.1f} | "
+            f"{r['coll_bytes']/1e9:.2f}e9 | {dom} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb_cells(cells: list[dict]) -> dict[str, dict]:
+    """worst roofline fraction / most collective-bound / most representative
+    (largest share of partial-sum collectives = biggest MoE psum traffic)."""
+    single = [c for c in cells if c["mesh"] == "single"
+              and c["shape"] == "train_4k"]
+    by_frac = min(single, key=lambda c: c["roofline"]["roofline_fraction"])
+    by_coll = max(single, key=lambda c: c["roofline"]["t_collective"]
+                  / max(c["roofline"]["t_compute"], 1e-12))
+    moe = [c for c in single if "moe" in c["arch"] or "deepseek" in c["arch"]
+           or "jamba" in c["arch"]]
+    by_tech = max(moe, key=lambda c: c["roofline"]["coll_bytes"]) if moe else single[0]
+    return {"worst_fraction": by_frac, "most_collective": by_coll,
+            "paper_technique": by_tech}
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print("## Dry-run\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## Roofline (multi pod)\n")
+    print(roofline_table(cells, "multi"))

@@ -1,0 +1,47 @@
+"""Elastic re-meshing: rebuild the mesh after losing hosts and continue from
+the latest checkpoint with re-sharded state.
+
+On a real fleet the runtime would: detect the failed slice (missed
+heartbeats), drain, pick the largest healthy rectangle, and restart the job
+on it. What the *framework* must guarantee — and what this module + tests
+demonstrate — is that training state round-trips across mesh shapes: leaves
+are checkpointed with global shapes, so `CheckpointManager.restore` can place
+them onto any new mesh's shardings.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.checkpoint.store import CheckpointManager
+from repro.sharding import rules
+
+
+def largest_healthy_mesh(n_devices: int, model_parallel: int):
+    """Given a surviving device count, build the biggest (data, model) mesh
+    that keeps the model-parallel degree (weights layouts stay valid) —
+    i.e. drop data-parallel replicas, never split the model differently."""
+    if n_devices < model_parallel:
+        raise ValueError(f"need >= {model_parallel} devices for TP; have "
+                         f"{n_devices}")
+    data = n_devices // model_parallel
+    devices = jax.devices()[:data * model_parallel]
+    import numpy as np
+    arr = np.array(devices).reshape(data, model_parallel)
+    from jax.sharding import Mesh
+    return Mesh(arr, ("data", "model"),
+                axis_types=(AxisType.Auto,) * 2)
+
+
+def resume_on_mesh(ckpt: CheckpointManager, mesh, params_shapes, opt_shapes):
+    """Restore the newest checkpoint re-sharded for `mesh`. Returns
+    (step, params, opt_state)."""
+    step = ckpt.latest_step()
+    if step is None:
+        raise FileNotFoundError("no checkpoint to resume from")
+    tree = {"params": params_shapes, "opt_state": opt_shapes}
+    sh = {"params": rules.params_shardings(mesh, params_shapes),
+          "opt_state": rules.opt_state_shardings(mesh, opt_shapes)}
+    restored = ckpt.restore(step, tree, sh)
+    return step, restored["params"], restored["opt_state"]

@@ -1,0 +1,135 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented here (all exercised by tests on fake
+device meshes):
+  * periodic async checkpoints with atomic commit (checkpoint/store.py);
+  * SIGTERM/SIGINT (preemption) -> final blocking checkpoint -> clean exit;
+  * auto-resume from the newest valid checkpoint, onto a possibly *different*
+    mesh (elastic restart: leaves are saved with global shapes, re-sharded on
+    restore);
+  * straggler detection: per-step wall-time EWMA + outlier flagging, with a
+    rolling report (on real fleets this feeds re-scheduling; here it logs and
+    counts);
+  * deterministic, stateless-resumable data order (step-indexed PRNG).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_k: float = 3.0      # flag steps slower than k * EWMA
+    ewma_alpha: float = 0.1
+
+
+class StragglerDetector:
+    """EWMA-based step-time monitor. On a pod, chronic stragglers trigger
+    re-slicing; here we produce the same signal (flag + counts + report)."""
+
+    def __init__(self, k: float = 3.0, alpha: float = 0.1):
+        self.k = k
+        self.alpha = alpha
+        self.ewma: float | None = None
+        self.flags: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if self.ewma is not None and dt > self.k * self.ewma:
+            self.flags.append((step, dt, self.ewma))
+            is_straggler = True
+            # don't pollute the EWMA with the outlier
+        else:
+            self.ewma = dt if self.ewma is None else (
+                self.alpha * dt + (1 - self.alpha) * self.ewma)
+        return is_straggler
+
+    def report(self) -> dict:
+        return {"ewma_s": self.ewma, "n_flagged": len(self.flags),
+                "flagged_steps": [s for s, _, _ in self.flags[-10:]]}
+
+
+class Trainer:
+    def __init__(self, loop_cfg: TrainLoopConfig, train_step: Callable,
+                 params: Any, opt_state: Any,
+                 batch_fn: Callable[[int], Any],
+                 shardings: tuple[Any, Any] | None = None):
+        self.cfg = loop_cfg
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.batch_fn = batch_fn
+        self.shardings = shardings
+        self.ckpt = CheckpointManager(loop_cfg.ckpt_dir, loop_cfg.keep_last)
+        self.straggler = StragglerDetector(loop_cfg.straggler_k,
+                                           loop_cfg.ewma_alpha)
+        self.start_step = 0
+        self.history: list[dict] = []
+        self._preempted = False
+
+    # ----------------------------------------------------------- preemption
+    def install_signal_handlers(self) -> None:
+        def handler(signum, frame):  # noqa: ARG001
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    # --------------------------------------------------------------- resume
+    def maybe_restore(self) -> int:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return 0
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        sh = (None if self.shardings is None else
+              {"params": self.shardings[0], "opt_state": self.shardings[1]})
+        restored = self.ckpt.restore(latest, tree, sh)
+        self.params = restored["params"]
+        self.opt_state = restored["opt_state"]
+        self.start_step = latest
+        return latest
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> dict:
+        step = self.start_step
+        while step < self.cfg.total_steps and not self._preempted:
+            batch = self.batch_fn(step)
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            flagged = self.straggler.observe(step, dt)
+            step += 1
+            if step % self.cfg.log_every == 0 or flagged:
+                rec = {"step": step, "dt_s": round(dt, 4),
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "straggler": flagged}
+                self.history.append(rec)
+                print(f"step {step:>6} loss={rec['loss']:.4f} "
+                      f"gnorm={rec['grad_norm']:.3f} dt={dt*1e3:.0f}ms"
+                      + ("  [STRAGGLER]" if flagged else ""), flush=True)
+            if step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step, {"params": self.params,
+                                      "opt_state": self.opt_state})
+        # final (blocking) checkpoint — also the preemption path
+        self.ckpt.save(step, {"params": self.params,
+                              "opt_state": self.opt_state}, blocking=True)
+        return {"final_step": step, "preempted": self._preempted,
+                "straggler": self.straggler.report(),
+                "history": self.history}

@@ -1,0 +1,40 @@
+"""Parallelism context threaded through model code."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallel:
+    """Everything model code needs to know about the mesh.
+
+    psum_strategy: how tensor-parallel partial sums are combined —
+      "active"  in-network reduction (psum / reduce-scatter): the paper's
+                active memory controller at interconnect scale;
+      "passive" all_gather + local add: the paper's read-back baseline.
+    remat: activation checkpoint policy for the period scan.
+    """
+    mesh: Mesh
+    dp_axes: tuple[str, ...]
+    tp_axis: str = "model"
+    psum_strategy: Literal["active", "passive"] = "active"
+    remat: Literal["none", "dots", "full"] = "full"
+    flash_decode: bool = False   # shard_map decode attention over the
+                                 # S-sharded KV cache (local update + active
+                                 # partial-softmax combine)
+    seq_shard_attn: bool = True  # shard attention q/scores over tp on the
+                                 # sequence dim (off: heads/replication only)
+
+
+def make_parallel(mesh: Mesh, *, psum_strategy: str = "active",
+                  remat: str = "full", flash_decode: bool = False,
+                  seq_shard_attn: bool = True) -> Parallel:
+    multi = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi else ("data",)
+    return Parallel(mesh=mesh, dp_axes=dp, psum_strategy=psum_strategy,
+                    remat=remat, flash_decode=flash_decode,
+                    seq_shard_attn=seq_shard_attn)

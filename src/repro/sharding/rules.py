@@ -1,0 +1,196 @@
+"""Name-based sharding rules: parameter/cache pytree paths -> PartitionSpecs.
+
+Logical axes:
+  fsdp — parameter/optimizer sharding axis: ("pod", "data") on the multi-pod
+         mesh, ("data",) on a single pod (ZeRO-3-style).
+  tp   — tensor parallel axis: "model".
+  dp   — batch/activation axis: same mesh axes as fsdp.
+
+Column-parallel weights (d -> hidden): P(fsdp, tp). Row-parallel weights
+(hidden -> d): P(tp, fsdp) — their matmuls produce the partial sums over the
+tp axis that the paper's technique targets (combined actively via psum /
+reduce-scatter by XLA, or passively via the all_gather path in
+models/moe.py).
+
+Stacked-period parameters get a leading None axis automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_axes(mesh: Mesh) -> dict[str, Any]:
+    multi = "pod" in mesh.axis_names
+    fsdp = ("pod", "data") if multi else ("data",)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return {"fsdp": fsdp, "tp": "model", "dp": fsdp, "sizes": sizes}
+
+
+def _axis_size(axis, sizes: dict[str, int]) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes[a]
+        return n
+    return sizes[axis]
+
+
+def _fit(spec_axes: tuple, shape: tuple[int, ...], sizes: dict[str, int]) -> P:
+    """Drop any proposed mesh axis whose shard count does not divide the
+    corresponding dim (e.g. 2 kv heads on a 16-way model axis, odd vocabs on
+    the fsdp axis) — those dims fall back to replication."""
+    fitted = []
+    for dim, axis in zip(shape, spec_axes):
+        n = _axis_size(axis, sizes)
+        fitted.append(axis if (n > 1 and dim % n == 0) or n == 1 else None)
+    return P(*fitted)
+
+
+_COL = {"wq", "wk", "wv", "wi", "wg", "wx", "wz", "lm_head"}
+_ROW = {"wo"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+    return names
+
+
+def param_spec(path, leaf, axes: dict) -> P:
+    names = _path_names(path)
+    fsdp, tp = axes["fsdp"], axes["tp"]
+    stacked = int(any(n in ("periods", "enc_periods") for n in names))
+    pre = (None,) * stacked
+    ndim = leaf.ndim - stacked
+    name_set = set(names)
+
+    def mk(*spec):
+        return _fit(pre + spec, leaf.shape, axes["sizes"])
+
+    if "routed" in name_set:  # (E, d, f) / (E, f, d)
+        if names[-1] == "wo":
+            return mk(None, tp, fsdp)
+        return mk(None, fsdp, tp)
+    if "router" in name_set or "shared_gate" in name_set:
+        return mk(*((None,) * ndim))
+    # biases / norms / scalars / small vectors
+    if ndim <= 1:
+        if names[-1] == "b" and len(names) >= 2 and names[-2] in _COL:
+            return mk(tp)
+        return mk(*((None,) * ndim))
+    if names[-1] in ("w",) and len(names) >= 2:
+        parent = names[-2]
+        if parent in _COL:
+            return mk(fsdp, tp)
+        if parent in _ROW:
+            return mk(tp, fsdp)
+        if parent == "embed":
+            # (vocab, d): vocab over tp, d over fsdp — so the TIED head
+            # (x @ embed.T) yields vocab-sharded logits over the model axis
+            return mk(tp, fsdp)
+        if parent == "wkv_a":
+            return mk(fsdp, None)        # (d, lora+rope): small out dim
+        if parent == "wkv_b":
+            return mk(None, tp)          # (lora, H*(nope+v))
+        if parent in ("wbc", "wdt"):
+            return mk(fsdp, None)
+        if parent == "enc_proj":
+            return mk(None, None)
+    if names[-1] == "conv_w":            # (K, conv_dim)
+        return mk(None, tp)
+    return mk(*((None,) * ndim))
+
+
+def cache_spec(path, leaf, axes: dict) -> P:
+    names = _path_names(path)
+    fsdp, tp = axes["dp"], axes["tp"]
+    stacked = int(any(n in ("periods", "enc_periods") for n in names))
+    pre = (None,) * stacked
+
+    def mk(*spec):
+        return _fit(pre + spec, leaf.shape, axes["sizes"])
+
+    last = names[-1]
+    if last == "pos":
+        return P()
+    # KV caches shard the SEQUENCE dim over the tp axis (flash-decoding
+    # style): per-device cache reads shrink by TP, and the softmax over the
+    # sharded dim combines per-shard partial (max, sum) actively via psum —
+    # the paper's partial-sum story applied to decode. Head dims rarely
+    # divide TP=16 (GQA kv<=8), so sequence is the right axis.
+    if last in ("k", "v"):               # (B, S, hkv, hd)
+        return mk(fsdp, tp, None, None)
+    if last == "latent" or last == "k_pe":   # (B, S, dim)
+        return mk(fsdp, tp, None)
+    if last == "conv":                   # (B, K-1, conv_dim)
+        return mk(fsdp, None, tp)
+    if last == "ssm":                    # (B, h, p, n)
+        return mk(fsdp, tp, None, None)
+    return mk(*((None,) * (leaf.ndim - stacked)))
+
+
+def tree_shardings(mesh: Mesh, tree_shapes: Any, spec_fn) -> Any:
+    axes = mesh_axes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(path, leaf, axes)),
+        tree_shapes)
+
+
+def params_shardings(mesh: Mesh, params_shapes: Any,
+                     weight_mode: str = "fsdp") -> Any:
+    """weight_mode="fsdp": ZeRO-3-style weight sharding over the data axes
+    (lowest memory; per-microbatch all-gathers). "zero2": weights replicated
+    over fsdp (tp-sharded only) while optimizer state stays fsdp-sharded —
+    removes the per-microbatch weight gathers at the cost of param-replica
+    memory (see EXPERIMENTS §Perf hillclimb 1)."""
+    if weight_mode == "fsdp":
+        return tree_shardings(mesh, params_shapes, param_spec)
+
+    def zero2_spec(path, leaf, axes):
+        spec = param_spec(path, leaf, axes)
+        fsdp = axes["fsdp"]
+        return P(*(None if a == fsdp or a == "data"
+                   or (isinstance(a, tuple) and set(a) & {"data", "pod"})
+                   else a for a in spec))
+
+    return tree_shardings(mesh, params_shapes, zero2_spec)
+
+
+def caches_shardings(mesh: Mesh, cache_shapes: Any) -> Any:
+    return tree_shardings(mesh, cache_shapes, cache_spec)
+
+
+def opt_state_shardings(mesh: Mesh, opt_shapes: Any) -> Any:
+    """Adam m/v/master mirror the parameter specs; count is replicated."""
+    axes = mesh_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        if names and names[0] == "count":
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(path[1:], leaf, axes))
+
+    return jax.tree_util.tree_map_with_path(spec, opt_shapes)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: Any) -> Any:
+    axes = mesh_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        raw = (axes["dp"],) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, _fit(raw, leaf.shape, axes["sizes"]))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)

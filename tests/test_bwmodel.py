@@ -1,0 +1,200 @@
+"""Unit + property tests for the paper's bandwidth model (Section II/III)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bwmodel
+from repro.core.bwmodel import Partition, layer_bandwidth, partition_layer
+from repro.core.cnn_zoo import PAPER_CNNS, PAPER_TABLE3, ConvLayer, get_cnn
+
+P_VALUES = (512, 1024, 2048, 4096, 8192, 16384)
+
+
+def _layer(m=64, n=128, k=3, wi=28, wo=28, groups=1):
+    return ConvLayer(name="t", cin=m, cout=n, k=k, wi=wi, hi=wi, wo=wo, ho=wo,
+                     groups=groups)
+
+
+# ---------------------------------------------------------------- faithful eqs
+def test_eq2_eq3_literal():
+    """B_i and B_o match eqs (2)/(3) symbol-for-symbol."""
+    l = _layer(m=96, n=256, k=5, wi=27, wo=27)
+    part = Partition(m=16, n=8)
+    b_i, b_o = layer_bandwidth(l, part, "passive")
+    assert b_i == l.wi * l.hi * l.cin * (l.cout / part.n)
+    assert b_o == l.wo * l.ho * l.cout * (2 * l.cin / part.m - 1)
+
+
+def test_active_controller_removes_readback():
+    l = _layer()
+    part = Partition(m=8, n=16)
+    _, b_o_passive = layer_bandwidth(l, part, "passive")
+    _, b_o_active = layer_bandwidth(l, part, "active")
+    iters = l.cin / part.m
+    assert b_o_active == l.wo * l.ho * l.cout * iters
+    assert b_o_passive == 2 * b_o_active - l.wo * l.ho * l.cout
+
+
+def test_eq7_formula():
+    l = _layer(m=64, n=128, k=3, wi=56, wo=56)
+    for p in P_VALUES:
+        m_star = bwmodel.optimal_m_realvalued(l, p)
+        assert m_star == pytest.approx(
+            math.sqrt(2 * l.wo * l.ho * p / (l.wi * l.hi * l.k ** 2)))
+
+
+def test_eq7_is_stationary_point():
+    """The continuous optimum of eq (6) has zero derivative at eq (7)."""
+    l = _layer(m=256, n=512, k=3, wi=14, wo=14)
+    p = 4096
+
+    def bw(m):
+        return (l.wi * l.hi * l.cin * l.cout * l.k ** 2 * m / p
+                + l.wo * l.ho * l.cout * (2 * l.cin / m - 1))
+
+    m_star = bwmodel.optimal_m_realvalued(l, p)
+    eps = 1e-4
+    deriv = (bw(m_star + eps) - bw(m_star - eps)) / (2 * eps)
+    assert abs(deriv) < 1e-3 * bw(m_star)
+    assert bw(m_star) <= min(bw(m_star * 0.5), bw(m_star * 2.0))
+
+
+def test_mac_constraint_eq1():
+    for net in PAPER_CNNS:
+        for layer in get_cnn(net):
+            for p in (512, 2048, 16384):
+                for strat in bwmodel.STRATEGIES:
+                    part = partition_layer(layer, p, strat)
+                    if layer.k ** 2 <= p:  # eq (1) satisfiable
+                        assert part.macs(layer.k) <= p, (net, layer.name, strat)
+
+
+# ------------------------------------------------------- paper-table validation
+def test_table3_exact_matches():
+    """Five of eight CNNs match the paper's Table III to 3 decimals; the
+    remaining three deviate due to unpublished model-variant choices
+    (documented in EXPERIMENTS.md)."""
+    exact = {"alexnet", "squeezenet", "googlenet", "resnet18", "mnasnet"}
+    for net in exact:
+        ours = bwmodel.min_bandwidth(get_cnn(net)) / 1e6
+        assert ours == pytest.approx(PAPER_TABLE3[net], abs=5e-4), net
+
+
+def test_table3_mobilenet_v1_matches_paper():
+    ours = bwmodel.min_bandwidth(get_cnn("mobilenetv1")) / 1e6
+    assert ours == pytest.approx(PAPER_TABLE3["mobilenet"], rel=0.01)
+
+
+@pytest.mark.parametrize("net", PAPER_CNNS)
+@pytest.mark.parametrize("p", (512, 2048, 16384))
+def test_table1_ordering(net, p):
+    """Paper's central Table-I claim: this-work <= equal <= max strategies."""
+    kw = dict(paper_convention=True)
+    opt = bwmodel.network_table(net, p, "paper_opt", **kw)
+    eq = bwmodel.network_table(net, p, "equal", **kw)
+    mi = bwmodel.network_table(net, p, "max_input", **kw)
+    mo = bwmodel.network_table(net, p, "max_output", **kw)
+    assert opt <= eq * 1.001
+    assert opt <= mi * 1.001
+    assert opt <= mo * 1.001
+
+
+@pytest.mark.parametrize("net", PAPER_CNNS)
+def test_bw_decreases_with_macs_and_approaches_min(net):
+    layers = get_cnn(net)
+    prev = float("inf")
+    for p in P_VALUES:
+        b = bwmodel.network_bandwidth(layers, p, "exact_opt")
+        assert b <= prev * 1.001
+        prev = b
+    huge = bwmodel.network_bandwidth(layers, 1 << 34, "exact_opt")
+    assert huge == pytest.approx(bwmodel.min_bandwidth(layers), rel=1e-6)
+
+
+@pytest.mark.parametrize("net", PAPER_CNNS)
+@pytest.mark.parametrize("p", P_VALUES)
+def test_table2_active_saving_bands(net, p):
+    """Fig. 2 claim: active controller saves; at P=512 savings 19-42%."""
+    passive = bwmodel.network_table(net, p, "paper_opt", "passive",
+                                    paper_convention=True)
+    active = bwmodel.network_table(net, p, "paper_opt", "active",
+                                   paper_convention=True)
+    saving = 100 * (1 - active / passive)
+    assert 0.0 < saving < 50.0
+    if p == 512:
+        assert 15.0 < saving < 45.0, (net, saving)
+
+
+def test_exact_opt_beats_first_order():
+    """Beyond-paper: integer-exact search never loses to the snapped eq (7)."""
+    for net in PAPER_CNNS:
+        for p in (512, 2048, 16384):
+            exact = bwmodel.network_bandwidth(get_cnn(net), p, "exact_opt")
+            paper = bwmodel.network_bandwidth(get_cnn(net), p, "paper_opt",
+                                              exact_iters=True)
+            assert exact <= paper * 1.0001, (net, p)
+
+
+# -------------------------------------------------------------------- property
+layer_st = st.builds(
+    _layer,
+    m=st.integers(1, 512), n=st.integers(1, 512),
+    k=st.sampled_from([1, 3, 5, 7, 11]),
+    wi=st.integers(7, 224), wo=st.integers(7, 224))
+
+
+@settings(max_examples=200, deadline=None)
+@given(layer=layer_st, p=st.sampled_from(P_VALUES))
+def test_property_active_never_worse(layer, p):
+    part = partition_layer(layer, p, "paper_opt")
+    bp = sum(layer_bandwidth(layer, part, "passive"))
+    ba = sum(layer_bandwidth(layer, part, "active"))
+    assert ba <= bp
+
+
+@settings(max_examples=200, deadline=None)
+@given(layer=layer_st, p=st.sampled_from(P_VALUES))
+def test_property_exact_is_min_over_partitions(layer, p):
+    """exact_opt is a true lower envelope over all feasible partitions."""
+    best = partition_layer(layer, p, "exact_opt")
+    b_best = sum(layer_bandwidth(layer, best, "passive", exact_iters=True))
+    rng = np.random.default_rng(0)
+    budget = max(1, p // layer.k ** 2)
+    for _ in range(20):
+        m = int(rng.integers(1, min(layer.cin, budget) + 1))
+        n = min(layer.cout, max(1, budget // m))
+        b = sum(layer_bandwidth(layer, Partition(m, n), "passive",
+                                exact_iters=True))
+        assert b_best <= b + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(layer=layer_st, p=st.sampled_from(P_VALUES))
+def test_property_partition_feasible(layer, p):
+    for strat in ("max_input", "max_output", "equal", "paper_opt"):
+        part = partition_layer(layer, p, strat)
+        assert 1 <= part.m <= layer.cin
+        assert 1 <= part.n <= layer.cout
+        if layer.k ** 2 <= p:
+            assert part.macs(layer.k) <= p
+
+
+@settings(max_examples=100, deadline=None)
+@given(layer=layer_st, p=st.sampled_from(P_VALUES),
+       m=st.integers(1, 64), n=st.integers(1, 64))
+def test_property_bw_positive_monotone_iters(layer, p, m, n):
+    """More MAC parallelism on either axis never increases traffic."""
+    m = min(m, layer.cin)
+    n = min(n, layer.cout)
+    b1 = sum(layer_bandwidth(layer, Partition(m, n), "passive", exact_iters=True))
+    b2 = sum(layer_bandwidth(layer, Partition(min(2 * m, layer.cin), n),
+                             "passive", exact_iters=True))
+    b3 = sum(layer_bandwidth(layer, Partition(m, min(2 * n, layer.cout)),
+                             "passive", exact_iters=True))
+    assert b1 > 0
+    assert b2 <= b1 + 1e-9
+    assert b3 <= b1 + 1e-9
