@@ -10,7 +10,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partitioner import plan_matmul_blocks
+from repro import plan
 from repro.kernels.psum_matmul import hbm_traffic_bytes, psum_matmul
 
 GEMMS = [
@@ -24,8 +24,9 @@ GEMMS = [
 def traffic_rows() -> list[str]:
     rows = []
     for name, m, n, k in GEMMS:
-        blocks = plan_matmul_blocks(m, n, k)
-        kw = dict(bm=blocks.bm, bn=blocks.bn, bk=blocks.bk)
+        sched = plan.plan(plan.MatmulWorkload(name=name, m=m, n=n, k=k),
+                          strategy="exhaustive_vmem", controller="active").schedule
+        kw = dict(bm=sched.bm, bn=sched.bn, bk=sched.bk)
         act = hbm_traffic_bytes(m, n, k, controller="active", **kw)
         pas = hbm_traffic_bytes(m, n, k, controller="passive", **kw)
         saving = 100 * (1 - act / pas)

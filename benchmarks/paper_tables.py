@@ -1,4 +1,5 @@
-"""Benchmarks reproducing every table/figure of the paper.
+"""Benchmarks reproducing every table/figure of the paper, driven by the
+unified ``repro.plan`` API.
 
 Each function returns rows and prints ``name,us_per_call,derived`` CSV lines
 (us_per_call = wall time of computing the table entry; derived = the value).
@@ -8,7 +9,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import bwmodel
+from repro import plan
 from repro.core.cnn_zoo import PAPER_CNNS, PAPER_TABLE3, get_cnn
 
 P_TABLE1 = (512, 2048, 16384)
@@ -40,7 +41,7 @@ def table1() -> list[str]:
     for net in PAPER_CNNS:
         for p in P_TABLE1:
             for strat in STRATEGIES:
-                val, us = _timed(lambda: bwmodel.network_table(
+                val, us = _timed(lambda: plan.network_traffic(
                     net, p, strat, paper_convention=True) / 1e6)
                 rows.append(f"table1/{net}/P{p}/{strat},{us:.0f},{val:.2f}")
     return rows
@@ -52,7 +53,7 @@ def table2() -> list[str]:
     for net in PAPER_CNNS:
         for p in P_TABLE2:
             for ctrl in ("passive", "active"):
-                val, us = _timed(lambda: bwmodel.network_table(
+                val, us = _timed(lambda: plan.network_traffic(
                     net, p, "paper_opt", ctrl, paper_convention=True) / 1e6)
                 rows.append(f"table2/{net}/P{p}/{ctrl},{us:.0f},{val:.2f}")
     return rows
@@ -62,7 +63,7 @@ def table3() -> list[str]:
     """Table III: minimum BW (unlimited MACs), with deviation vs paper."""
     rows = []
     for net in PAPER_CNNS:
-        val, us = _timed(lambda: bwmodel.min_bandwidth(get_cnn(net)) / 1e6)
+        val, us = _timed(lambda: plan.min_network_traffic(net) / 1e6)
         dev = 100 * (val - PAPER_TABLE3[net]) / PAPER_TABLE3[net]
         rows.append(f"table3/{net},{us:.0f},{val:.3f}")
         rows.append(f"table3_dev_pct/{net},0,{dev:.1f}")
@@ -75,10 +76,10 @@ def fig2() -> list[str]:
     for net in PAPER_CNNS:
         for p in P_TABLE2:
             def saving():
-                pas = bwmodel.network_table(net, p, "paper_opt", "passive",
-                                            paper_convention=True)
-                act = bwmodel.network_table(net, p, "paper_opt", "active",
-                                            paper_convention=True)
+                pas = plan.network_traffic(net, p, "paper_opt", "passive",
+                                           paper_convention=True)
+                act = plan.network_traffic(net, p, "paper_opt", "active",
+                                           paper_convention=True)
                 return 100.0 * (1 - act / pas)
             val, us = _timed(saving)
             rows.append(f"fig2/{net}/P{p},{us:.0f},{val:.1f}")
@@ -91,11 +92,12 @@ def beyond_exact_search() -> list[str]:
     free)."""
     rows = []
     for net in PAPER_CNNS:
+        workloads = plan.conv_workloads(net)
         for p in P_TABLE1:
-            paper, us1 = _timed(lambda: bwmodel.network_bandwidth(
-                get_cnn(net), p, "paper_opt", exact_iters=True) / 1e6)
-            exact, us2 = _timed(lambda: bwmodel.network_bandwidth(
-                get_cnn(net), p, "exact_opt") / 1e6)
+            paper, us1 = _timed(lambda: plan.network_traffic(
+                workloads, p, "paper_opt", exact_iters=True) / 1e6)
+            exact, us2 = _timed(lambda: plan.network_traffic(
+                workloads, p, "exact_opt") / 1e6)
             gain = 100 * (1 - exact / paper)
             rows.append(f"beyond/exact_vs_eq7/{net}/P{p},{us1+us2:.0f},{gain:.2f}")
     return rows

@@ -1,21 +1,47 @@
 """Benchmark harness — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Sections:
+Prints ``name,us_per_call,derived`` CSV (default) or, with ``--json``,
+machine-readable rows ``[{"name", "us_per_call", "derived"}, ...]`` so perf
+trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
+
   table1  — Table I   (partition strategies x P x 8 CNNs)
   table2  — Table II  (passive vs active memory controller)
   table3  — Table III (minimum bandwidth) + deviation vs paper
   fig2    — Fig. 2    (% saving of the active controller)
   beyond  — beyond-paper exact-search gains
   kernels — VMEM-level active/passive traffic + interpret timings
+
+Usage: python benchmarks/run.py [section] [--json]
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 
+# Runnable as `python benchmarks/run.py` from a checkout: make the repo root
+# (for `benchmarks.*`) and src/ (for `repro.*`, when not pip-installed)
+# importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
+
+def parse_row(row: str) -> dict:
+    """``name,us_per_call,derived`` -> typed dict."""
+    name, us, derived = row.split(",")
+    return {"name": name, "us_per_call": float(us), "derived": float(derived)}
+
+
+def main(argv: list[str] | None = None) -> None:
     from benchmarks import kernel_traffic, paper_tables
+
+    argv = sys.argv[1:] if argv is None else argv
+    as_json = "--json" in argv
+    pos = [a for a in argv if not a.startswith("-")]
+    only = pos[0] if pos else None
 
     sections = {
         "table1": paper_tables.table1,
@@ -26,12 +52,21 @@ def main() -> None:
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
+    if only is not None and only not in sections:
+        raise SystemExit(f"unknown section {only!r}; known: {sorted(sections)}")
+
+    rows: list[str] = []
     for name, fn in sections.items():
         if only and name != only:
             continue
-        for row in fn():
+        rows.extend(fn())
+
+    if as_json:
+        json.dump([parse_row(r) for r in rows], sys.stdout, indent=1)
+        print()
+    else:
+        print("name,us_per_call,derived")
+        for row in rows:
             print(row)
 
 

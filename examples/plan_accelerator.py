@@ -1,22 +1,34 @@
-"""Accelerator design-space exploration with the paper's model: sweep MAC
-budgets and controllers across all eight CNNs and print the layer-level plan
-for one of them.
+"""Accelerator design-space exploration with the unified planner: sweep MAC
+budgets and controllers across all eight CNNs, print the layer-level plan for
+one of them, and plan the GEMMs of a transformer config with the same API.
 
   PYTHONPATH=src python examples/plan_accelerator.py [cnn]
 """
 import sys
 
+from repro import plan
 from repro.core import plan_network
-from repro.core.bwmodel import network_table
 from repro.core.cnn_zoo import PAPER_CNNS
 
 net = sys.argv[1] if len(sys.argv) > 1 else "mobilenet"
 
 print(f"{'CNN':<12}" + "".join(f"{p:>12}" for p in (512, 2048, 8192, 16384)))
 for cnn in PAPER_CNNS:
-    vals = [network_table(cnn, p, "exact_opt", "active") / 1e6
+    vals = [plan.network_traffic(cnn, p, "exact_opt", "active") / 1e6
             for p in (512, 2048, 8192, 16384)]
     print(f"{cnn:<12}" + "".join(f"{v:12.1f}" for v in vals))
 
 print()
 print(plan_network(net, 2048).report())
+
+# The same pipeline plans transformer GEMMs against a VMEM budget.
+from repro.configs.registry import get_config
+
+cfg = get_config("gemma-2b")
+print(f"\n# {cfg.name} GEMMs @ decode batch 1 x 4096 tokens")
+for wl in plan.transformer_matmuls(cfg, seq_len=4096, batch=1):
+    p = plan.plan(wl, strategy="exhaustive_vmem", controller="active")
+    s = p.schedule
+    print(f"{wl.name:<28} {wl.m:>8}x{wl.n:<8}x{wl.k:<6} "
+          f"blocks=({s.bm},{s.bn},{s.bk}) "
+          f"HBM={p.traffic.bytes/1e9:6.2f}GB")

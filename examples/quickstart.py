@@ -1,36 +1,37 @@
-"""Quickstart: the paper's model end-to-end in 40 lines.
+"""Quickstart: the paper's model end-to-end through the unified planning API.
 
   PYTHONPATH=src python examples/quickstart.py
 
-1. Computes the optimal feature-map partition for one conv layer (eq 7).
-2. Compares the four partitioning strategies on ResNet-18 (Table I row).
+1. Plans the optimal feature-map partition for one conv layer (eq 7).
+2. Compares the partitioning strategies on ResNet-18 (Table I row).
 3. Shows the active-memory-controller saving (Table II / Fig 2).
 4. Plans TPU matmul blocks with the same model (the VMEM generalization).
 """
-from repro.core import bwmodel, plan_network
+from repro import plan
+from repro.core import plan_network
 from repro.core.cnn_zoo import get_cnn
-from repro.core.partitioner import matmul_traffic, plan_matmul_blocks
 
-# 1 — one layer, eq (7)
-layer = get_cnn("resnet18")[5]
-part = bwmodel.partition_layer(layer, p_macs=2048, strategy="paper_opt")
-b_i, b_o = bwmodel.layer_bandwidth(layer, part)
-print(f"layer {layer.name}: m={part.m} n={part.n} "
-      f"BW={(b_i+b_o)/1e6:.2f}M activations")
+# 1 — one layer, eq (7): one entry point for planning + traffic prediction
+wl = plan.ConvWorkload.from_layer(get_cnn("resnet18")[5])
+p = plan.plan(wl, budget=2048, strategy="paper_opt", controller="passive")
+print(f"layer {wl.name}: m={p.schedule.m} n={p.schedule.n} "
+      f"BW={p.traffic.interconnect_words/1e6:.2f}M activations")
 
 # 2 — strategies on a full network
 for strat in ("max_input", "max_output", "equal", "paper_opt", "exact_opt"):
-    bw = bwmodel.network_bandwidth(get_cnn("resnet18"), 2048, strat)
+    bw = plan.network_traffic("resnet18", 2048, strat)
     print(f"resnet18 @2048 MACs, {strat:<11}: {bw/1e6:8.1f}M")
 
 # 3 — active memory controller
-plan = plan_network("resnet18", 2048)
-print(f"active controller saves {plan.saving_pct:.1f}% "
-      f"({plan.total_passive/1e6:.1f}M -> {plan.total_active/1e6:.1f}M)")
+net = plan_network("resnet18", 2048)
+print(f"active controller saves {net.saving_pct:.1f}% "
+      f"({net.total_passive/1e6:.1f}M -> {net.total_active/1e6:.1f}M)")
 
-# 4 — the TPU generalization: blocks for a llama-90B FFN matmul
-blocks = plan_matmul_blocks(8192, 28672, 8192)
-t = matmul_traffic(8192, 28672, 8192, blocks, "active")
-tp = matmul_traffic(8192, 28672, 8192, blocks, "passive")
-print(f"FFN GEMM blocks bm={blocks.bm} bn={blocks.bn} bk={blocks.bk}: "
-      f"HBM {t['total']/1e9:.2f}G words active vs {tp['total']/1e9:.2f}G passive")
+# 4 — the TPU generalization: blocks for a llama-90B FFN matmul, same API
+gemm = plan.MatmulWorkload(name="ffn_up", m=8192, n=28672, k=8192)
+pa = plan.plan(gemm, strategy="exhaustive_vmem", controller="active")
+pp = plan.plan(gemm, strategy="exhaustive_vmem", controller="passive")
+s = pa.schedule
+print(f"FFN GEMM blocks bm={s.bm} bn={s.bn} bk={s.bk}: "
+      f"HBM {pa.traffic.interconnect_words/1e9:.2f}G words active "
+      f"vs {pp.traffic.interconnect_words/1e9:.2f}G passive")

@@ -3,12 +3,16 @@ partitioning (first-order analytical bandwidth model + optimal partition) and
 the active memory controller, plus the TPU-native generalization to matmul
 block tiling.
 
-Layout:
-  bwmodel.py      eqs (1)-(7), four partition strategies, passive/active traffic
+The planning implementation lives in ``repro.plan`` (one Workload ->
+Schedule -> Execution pipeline); this package keeps the paper-domain pieces
+and the legacy shims:
+
   cnn_zoo.py      the paper's eight CNNs as programmatic layer tables
-  partitioner.py  VMEM-budget block-shape planning for Pallas/XLA matmuls
   amc.py          executable, instrumented active-memory-controller model
-  planner.py      whole-network partition schedules
+                  (executes + validates ``repro.plan`` Schedules)
+  planner.py      whole-network partition schedules (wraps ``plan.plan_many``)
+  bwmodel.py      DEPRECATED shim over ``repro.plan.conv_model``
+  partitioner.py  DEPRECATED shim over ``repro.plan.gemm_model``
 """
 
 from repro.core.bwmodel import (CONTROLLERS, STRATEGIES, Partition,

@@ -11,8 +11,9 @@ The controller owns an SRAM region and accepts commands over the interconnect
              update, offloading the activation unit as well
 
 Every word crossing the interconnect and every SRAM access is tallied, so the
-analytical model of `bwmodel.py` can be validated against an executable
-implementation, and the convolution result against the jnp oracle.
+analytical model (`repro.plan.TrafficReport`) can be validated against an
+executable implementation (`validate_schedule`), and the convolution result
+against the jnp oracle.
 
 This is a *simulation* of SoC behaviour (numpy-level, used by tests and
 benchmarks); the TPU production analogue is the VMEM-resident accumulator in
@@ -26,8 +27,11 @@ import math
 
 import numpy as np
 
-from repro.core.bwmodel import Partition, layer_bandwidth
 from repro.core.cnn_zoo import ConvLayer
+from repro.plan.schedule import Controller, Partition, Schedule
+from repro.plan.traffic import TrafficReport as AnalyticalReport
+from repro.plan.traffic import conv_traffic
+from repro.plan.workload import ConvWorkload
 
 
 @dataclasses.dataclass
@@ -109,13 +113,24 @@ def _conv2d_block(x: np.ndarray, w: np.ndarray, stride: int, pad: int) -> np.nda
     return out.reshape(cout, ho, wo)
 
 
-def run_partitioned_conv(layer: ConvLayer, part: Partition, x: np.ndarray,
-                         w: np.ndarray, active: bool, pad: int | None = None,
+def run_partitioned_conv(layer: ConvLayer, part: "Schedule | Partition",
+                         x: np.ndarray, w: np.ndarray,
+                         active: bool | None = None, pad: int | None = None,
                          act: bool = False) -> tuple[np.ndarray, TrafficMeter]:
     """Execute the paper's partitioned loop nest with an instrumented memory
     controller, returning (output, traffic). `x`: (cin, hi, wi) float32,
-    `w`: (cout, cin, k, k). Input reads are also metered (input SRAM)."""
+    `w`: (cout, cin, k, k). Input reads are also metered (input SRAM).
+
+    `part` is a unified `repro.plan.Schedule` (whose controller selects
+    active/passive behaviour) or a legacy `Partition` (then `active` must be
+    given). An explicit `active=` always wins."""
     assert layer.groups == 1, "meter model is for dense convs"
+    if isinstance(part, Schedule):
+        if active is None:
+            active = part.controller is Controller.ACTIVE
+        part = part.as_partition()
+    elif active is None:
+        raise TypeError("active= is required when part is a bare Partition")
     pad = layer.k // 2 if pad is None else pad
     m, n = min(part.m, layer.cin), min(part.n, layer.cout)
     out_ctrl = MemoryController((layer.cout, layer.ho, layer.wo), active)
@@ -138,9 +153,45 @@ def run_partitioned_conv(layer: ConvLayer, part: Partition, x: np.ndarray,
         sram_writes=out_ctrl.meter.sram_writes)
 
 
-def analytical_interconnect_words(layer: ConvLayer, part: Partition,
-                                  active: bool) -> float:
-    """What bwmodel.py predicts for the metered loop above (ceil iterations)."""
-    b_i, b_o = layer_bandwidth(layer, part, "active" if active else "passive",
-                               exact_iters=True)
-    return b_i + b_o
+def analytical_report(layer: ConvLayer, part: "Schedule | Partition",
+                      active: bool | None = None) -> AnalyticalReport:
+    """The `repro.plan.TrafficReport` the model predicts for the metered loop
+    above (ceil iterations)."""
+    if isinstance(part, Schedule):
+        sched = part if active is None else dataclasses.replace(
+            part, controller=Controller.ACTIVE if active else Controller.PASSIVE)
+    else:
+        if active is None:
+            raise TypeError("active= is required when part is a bare Partition")
+        sched = Schedule.from_partition(
+            part, Controller.ACTIVE if active else Controller.PASSIVE)
+    return conv_traffic(ConvWorkload.from_layer(layer), sched, exact_iters=True)
+
+
+def analytical_interconnect_words(layer: ConvLayer, part: "Schedule | Partition",
+                                  active: bool | None = None) -> float:
+    """What the analytical model predicts for the metered loop (ceil iters)."""
+    return analytical_report(layer, part, active).interconnect_words
+
+
+def validate_schedule(layer: ConvLayer, schedule: Schedule,
+                      rng_seed: int = 0) -> tuple[TrafficMeter, AnalyticalReport]:
+    """Execute a `Schedule` on random data and cross-check the instrumented
+    meter against the analytical `TrafficReport` — interconnect words, SRAM
+    reads and SRAM writes must all agree exactly, and the convolution result
+    must match the reference. Raises AssertionError on any mismatch; returns
+    (meter, report) on success."""
+    rng = np.random.default_rng(rng_seed)
+    x = rng.standard_normal((layer.cin, layer.hi, layer.wi)).astype(np.float32)
+    w = rng.standard_normal((layer.cout, layer.cin, layer.k, layer.k)).astype(np.float32)
+    out, meter = run_partitioned_conv(layer, schedule, x, w)
+    report = analytical_report(layer, schedule)
+    for field, got in (("interconnect_words", meter.interconnect_words),
+                       ("sram_reads", meter.sram_reads),
+                       ("sram_writes", meter.sram_writes)):
+        want = getattr(report, field)
+        assert got == want, (
+            f"{layer.name} {schedule}: metered {field}={got} != model {want}")
+    ref = _conv2d_block(x, w, layer.stride, layer.k // 2)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+    return meter, report

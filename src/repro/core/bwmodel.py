@@ -1,122 +1,53 @@
-"""First-order bandwidth model for partial-sum partitioned convolutions.
+"""DEPRECATED shim — the first-order bandwidth model now lives in
+``repro.plan`` (``plan.conv_model`` for the math, ``plan.plan`` for the
+entry point). These wrappers preserve the seed's stringly-typed signatures
+and exact numerics for existing callers/tests; new code should use::
 
-Implements the paper's analytical model symbol-for-symbol:
-
-  constraint (eq 1):  K^2 * m * n <= P
-  input BW   (eq 2):  B_i = Wi*Hi*M * (N/n)          (re-read per output block)
-  output BW  (eq 3):  B_o = Wo*Ho*N * (2*M/m - 1)    (write + read-before-update)
-  optimum    (eq 7):  m* = sqrt(2*Wo*Ho*P / (Wi*Hi*K^2)), snapped to a factor of M
-
-plus the active-memory-controller variant of Section III, where the partial-sum
-read-back never crosses the interconnect (the controller performs
-read-update-write locally), so B_o drops to Wo*Ho*N * (M/m).
+    from repro import plan
+    p = plan.plan(plan.ConvWorkload.from_layer(layer), budget=p_macs,
+                  strategy="paper_opt", controller="active")
 
 Units are *activations* (the paper reports million activations / inference).
-
-Grouped convolutions (depthwise etc.) are handled per group: each group is an
-independent (M/g -> N/g) convolution; with M/g == 1 no cross-channel partial
-sums exist and both controllers coincide — the natural extension of the model.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Iterable
 
 from repro.core.cnn_zoo import ConvLayer, get_cnn
+from repro.plan import api as _api
+from repro.plan import conv_model as _conv_model
+from repro.plan.schedule import Controller, Partition, Strategy
+from repro.plan.workload import ConvWorkload
 
 STRATEGIES = ("max_input", "max_output", "equal", "paper_opt", "exact_opt")
 CONTROLLERS = ("passive", "active")
 
-
-@dataclasses.dataclass(frozen=True)
-class Partition:
-    """Channel partition: m input maps x n output maps per iteration."""
-
-    m: int
-    n: int
-
-    def macs(self, k: int) -> int:
-        return k * k * self.m * self.n
-
-
-def _factors(x: int) -> list[int]:
-    fs = [d for d in range(1, int(math.isqrt(x)) + 1) if x % d == 0]
-    return sorted(set(fs + [x // d for d in fs]))
-
-
-def _snap_to_factor(value: float, total: int, cap: int) -> int:
-    """Snap a real-valued block size to the nearest integer factor of `total`
-    that does not exceed `cap` (the paper's adaptation of eq 7)."""
-    cands = [f for f in _factors(total) if f <= cap]
-    return min(cands, key=lambda f: (abs(f - value), f)) if cands else 1
+__all__ = [
+    "STRATEGIES", "CONTROLLERS", "Partition", "layer_bandwidth",
+    "partition_layer", "network_bandwidth", "min_bandwidth", "network_table",
+    "optimal_m_realvalued",
+]
 
 
 def layer_bandwidth(layer: ConvLayer, part: Partition, controller: str = "passive",
                     exact_iters: bool = False) -> tuple[float, float]:
     """(B_i, B_o) in activations for one layer under a partition.
 
-    `exact_iters=True` uses ceil(M/m) iteration counts (valid for any integer
-    m, n); False uses the paper's M/m with m a factor of M.
+    Deprecated: use ``repro.plan.traffic_report`` for the full breakdown.
     """
-    if controller not in CONTROLLERS:
-        raise ValueError(controller)
-    g = layer.groups
-    mg, ng = layer.cin // g, layer.cout // g
-    m = min(part.m, mg)
-    n = min(part.n, ng)
-    out_iters = math.ceil(ng / n) if exact_iters else ng / n
-    in_iters = math.ceil(mg / m) if exact_iters else mg / m
-    b_i = layer.wi * layer.hi * layer.cin * out_iters
-    writes = layer.wo * layer.ho * layer.cout * in_iters
-    if controller == "active":
-        b_o = writes                      # controller adds locally; write-only traffic
-    else:
-        b_o = 2 * writes - layer.wo * layer.ho * layer.cout  # + read-before-update
-    return float(b_i), float(b_o)
+    return _conv_model.conv_bandwidth(
+        ConvWorkload.from_layer(layer), part.m, part.n,
+        Controller.coerce(controller), exact_iters)
 
 
 def partition_layer(layer: ConvLayer, p_macs: int, strategy: str = "paper_opt",
                     controller: str = "passive") -> Partition:
-    """Choose (m, n) for a layer given P MACs under one of the paper's four
-    strategies, or the beyond-paper exact integer search (`exact_opt`).
-
-    For `exact_opt` the objective honours the controller (active controllers
-    shift the optimum: the factor 2 in eq 7 disappears when read-back is free).
-    The four paper strategies are controller-agnostic, as in the paper.
-    """
-    g = layer.groups
-    mg, ng = layer.cin // g, layer.cout // g
-    budget = max(1, p_macs // (layer.k * layer.k))
-
-    if strategy == "max_input":
-        m = min(mg, budget)
-        n = min(ng, max(1, budget // m))
-    elif strategy == "max_output":
-        n = min(ng, budget)
-        m = min(mg, max(1, budget // n))
-    elif strategy == "equal":
-        side = max(1, int(math.isqrt(budget)))
-        m = min(mg, side)
-        n = min(ng, max(1, budget // m))
-    elif strategy == "paper_opt":
-        # eq (7): m* = sqrt(2 * Wo*Ho * P / (Wi*Hi * K^2))
-        m_star = math.sqrt(2.0 * layer.wo * layer.ho * p_macs
-                           / (layer.wi * layer.hi * layer.k * layer.k))
-        m = _snap_to_factor(m_star, mg, cap=min(mg, budget))
-        n = min(ng, max(1, budget // m))  # eq (5): n = P / (K^2 m)
-    elif strategy == "exact_opt":
-        best, best_b = Partition(1, 1), float("inf")
-        for m in range(1, min(mg, budget) + 1):
-            n = min(ng, max(1, budget // m))
-            b = sum(layer_bandwidth(layer, Partition(m, n), controller, exact_iters=True))
-            if b < best_b:
-                best, best_b = Partition(m, n), b
-        return best
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}; known: {STRATEGIES}")
-    return Partition(m, n)
+    """Choose (m, n) for a layer. Deprecated: use ``repro.plan.plan``."""
+    sched = _conv_model.plan_conv(
+        ConvWorkload.from_layer(layer), p_macs,
+        Strategy.coerce(strategy), Controller.coerce(controller))
+    return sched.as_partition()
 
 
 def network_bandwidth(layers: Iterable[ConvLayer], p_macs: int,
@@ -125,25 +56,18 @@ def network_bandwidth(layers: Iterable[ConvLayer], p_macs: int,
                       paper_convention: bool = False) -> float:
     """Total conv bandwidth (activations) for a network at P MACs.
 
-    `paper_convention=True` reproduces the paper's modelling choice of treating
-    grouped/depthwise convolutions as dense reductions (groups ignored). This
-    matches the published Tables I/II on MNASNet within ~1%; the groups-aware
-    default is physically correct (depthwise layers have no cross-channel
-    partial sums) and is reported separately as a model refinement.
+    Deprecated: use ``repro.plan.network_traffic``.
     """
-    total = 0.0
-    exact = strategy == "exact_opt" if exact_iters is None else exact_iters
-    for layer in layers:
-        if paper_convention and layer.groups > 1:
-            layer = dataclasses.replace(layer, groups=1)
-        part = partition_layer(layer, p_macs, strategy, controller)
-        total += sum(layer_bandwidth(layer, part, controller, exact_iters=exact))
-    return total
+    return _api.network_traffic(
+        [ConvWorkload.from_layer(l) for l in layers], p_macs, strategy,
+        controller, exact_iters=exact_iters, paper_convention=paper_convention)
 
 
 def min_bandwidth(layers: Iterable[ConvLayer]) -> float:
-    """Table III: unlimited MACs — each layer reads its input once and writes
-    its output once (eq 4 with m=M, n=N)."""
+    """Table III: unlimited MACs (eq 4 with m=M, n=N).
+
+    Deprecated: use ``repro.plan.min_network_traffic``.
+    """
     return float(sum(l.in_acts + l.out_acts for l in layers))
 
 
@@ -154,8 +78,7 @@ def network_table(name: str, p_macs: int, strategy: str, controller: str = "pass
 
 
 def optimal_m_realvalued(layer: ConvLayer, p_macs: int, controller: str = "passive") -> float:
-    """eq (7), and its active-controller refinement (beyond-paper): with free
-    read-back the objective loses the factor 2 -> m* = sqrt(Wo*Ho*P/(Wi*Hi*K^2))."""
-    factor = 2.0 if controller == "passive" else 1.0
-    return math.sqrt(factor * layer.wo * layer.ho * p_macs
-                     / (layer.wi * layer.hi * layer.k * layer.k))
+    """eq (7) and its active-controller refinement. Deprecated: see
+    ``repro.plan.optimal_m_realvalued``."""
+    return _conv_model.optimal_m_realvalued(
+        ConvWorkload.from_layer(layer), p_macs, Controller.coerce(controller))

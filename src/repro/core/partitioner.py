@@ -1,144 +1,25 @@
-"""Partial-sum-aware tiling: the paper's (m, n) channel partition generalized
-to matmul/conv block shapes for TPU kernels and XLA layers.
+"""DEPRECATED shim — the VMEM-budget GEMM block planner now lives in
+``repro.plan.gemm_model`` (and the unified entry point is ``repro.plan.plan``
+with a ``MatmulWorkload``). Everything here re-exports that implementation
+unchanged so existing callers/tests keep identical numbers; new code should
+use::
 
-The paper's accelerator has P MACs and chooses (m input maps, n output maps)
-per iteration to minimize HBM traffic. A TPU Pallas kernel has a VMEM budget
-and chooses (bm, bn, bk) block shapes per grid step. The objective is the
-same first-order traffic model; only the constraint changes:
-
-  paper:  K^2 * m * n               <= P MACs
-  here :  bytes(bm,bk) + bytes(bk,bn) + acc_bytes(bm,bn)  <= VMEM budget
-
-Traffic for C[M,N] = A[M,K] @ B[K,N] with grid (M/bm, N/bn, K/bk):
-
-  A reads:  ceil(N/bn) * M * K          (each A block re-read per N block)
-  B reads:  ceil(M/bm) * K * N
-  C,active: M * N                        (accumulator VMEM-resident across k)
-  C,passive: (2*ceil(K/bk) - 1) * M * N  (spill + read-back per k step)
-
-'active' is the TPU analogue of the paper's active memory controller: the
-accumulation happens at the memory closest to the data (VMEM) and partial sums
-never round-trip through HBM. 'passive' is the paper's baseline.
+    from repro import plan
+    p = plan.plan(plan.MatmulWorkload(m, n, k), strategy="exhaustive_vmem",
+                  controller="active")
+    p.schedule.as_blocks()   # MatmulBlocks(bm, bn, bk)
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
+from repro.plan.gemm_model import (DEFAULT_VMEM_BUDGET, LANE, SUBLANE,
+                                   VMEM_BYTES, MatmulBlocks,
+                                   conv_blocks_from_partition,
+                                   first_order_block, matmul_traffic,
+                                   plan_matmul_blocks, traffic_model_bytes)
 
-# TPU v5e-ish constants (see roofline/constants.py for the full set).
-VMEM_BYTES = 128 * 1024 * 1024  # 128 MiB VMEM per core (v5e: 128MB unified)
-DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024  # leave headroom for double buffering
-LANE = 128      # last-dim tile (MXU/VPU lane count)
-SUBLANE = 8     # second-to-last tile for fp32
-
-
-@dataclasses.dataclass(frozen=True)
-class MatmulBlocks:
-    bm: int
-    bn: int
-    bk: int
-
-    def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4,
-                   double_buffer: bool = True) -> int:
-        mult = 2 if double_buffer else 1   # double-buffered input blocks
-        return (mult * (self.bm * self.bk + self.bk * self.bn) * in_bytes
-                + self.bm * self.bn * acc_bytes)
-
-
-def matmul_traffic(m: int, n: int, k: int, blocks: MatmulBlocks,
-                   controller: str = "active") -> dict[str, float]:
-    """HBM traffic in *elements* for the blocked GEMM."""
-    gi = math.ceil(m / blocks.bm)
-    gj = math.ceil(n / blocks.bn)
-    gk = math.ceil(k / blocks.bk)
-    a_reads = gj * m * k
-    b_reads = gi * k * n
-    if controller == "active":
-        c_traffic = m * n
-    elif controller == "passive":
-        c_traffic = (2 * gk - 1) * m * n
-    else:
-        raise ValueError(controller)
-    return {"a_reads": float(a_reads), "b_reads": float(b_reads),
-            "c_traffic": float(c_traffic),
-            "total": float(a_reads + b_reads + c_traffic)}
-
-
-def _aligned_candidates(dim: int, align: int, cap: int) -> list[int]:
-    """Hardware-aligned block sizes for a dimension: multiples of `align`,
-    capped at min(dim rounded up, cap)."""
-    top = min(((dim + align - 1) // align) * align, cap)
-    cands = []
-    c = align
-    while c <= top:
-        cands.append(c)
-        c *= 2
-    if top not in cands:
-        cands.append(top)
-    return sorted(set(cands))
-
-
-def plan_matmul_blocks(m: int, n: int, k: int, *, in_bytes: int = 2,
-                       acc_bytes: int = 4, vmem_budget: int = DEFAULT_VMEM_BUDGET,
-                       controller: str = "active",
-                       max_block: int = 4096) -> MatmulBlocks:
-    """Exact search over hardware-aligned block shapes minimizing HBM traffic
-    under the VMEM budget — the integer-exact analogue of the paper's eq (7).
-
-    First-order intuition (matches eq 7 when the C term dominates): traffic
-    ~ M*N*K*(1/bm + 1/bn) + C-term, so square (bm = bn = sqrt(budget)) output
-    blocks with the largest feasible bk.
-    """
-    best: MatmulBlocks | None = None
-    best_t = float("inf")
-    for bm in _aligned_candidates(m, SUBLANE * 16, max_block):      # mult of 128
-        for bn in _aligned_candidates(n, LANE, max_block):
-            for bk in _aligned_candidates(k, LANE, max_block):
-                b = MatmulBlocks(bm, bn, bk)
-                if b.vmem_bytes(in_bytes, acc_bytes) > vmem_budget:
-                    continue
-                t = matmul_traffic(m, n, k, b, controller)["total"]
-                if t < best_t:
-                    best, best_t = b, t
-    if best is None:  # budget smaller than one minimal tile — take minimum
-        best = MatmulBlocks(SUBLANE * 16, LANE, LANE)
-    return best
-
-
-def first_order_block(m: int, n: int, k: int, *, in_bytes: int = 2,
-                      vmem_budget: int = DEFAULT_VMEM_BUDGET,
-                      max_block: int = 4096) -> MatmulBlocks:
-    """Closed-form analogue of the paper's eq (7) for GEMM: with the input
-    terms dominating, minimize 1/bm + 1/bn s.t. bk*(bm+bn)*in_bytes <= V
-    -> bm = bn (the 'square block' rule), bk as large as the leftover allows."""
-    side = min(int(math.sqrt(vmem_budget / (4 * in_bytes))), max_block)
-    bm = max(LANE, (min(side, m) // LANE) * LANE)
-    bn = max(LANE, (min(side, n) // LANE) * LANE)
-    bk_budget = vmem_budget // (2 * in_bytes * (bm + bn))
-    bk = max(LANE, (min(bk_budget, k) // LANE) * LANE)
-    return MatmulBlocks(bm, bn, bk)
-
-
-def conv_blocks_from_partition(m_part: int, n_part: int) -> tuple[int, int]:
-    """Map the paper's (m input maps, n output maps) partition onto channel
-    block sizes for the Pallas conv kernel (snap to lane multiples)."""
-    bm = max(SUBLANE, min(512, 1 << (m_part - 1).bit_length()))
-    bn = max(LANE, min(512, 1 << (n_part - 1).bit_length()))
-    return bm, bn
-
-
-def traffic_model_bytes(m: int, n: int, k: int, blocks: MatmulBlocks,
-                        controller: str, in_bytes: int = 2,
-                        out_bytes: int = 2, acc_bytes: int = 4) -> float:
-    """Traffic in bytes, distinguishing in/out/accumulator element widths.
-    Passive spills move fp32 accumulators; the active final write is the
-    output dtype — an additional saving the paper's word-count model hides."""
-    t = matmul_traffic(m, n, k, blocks, controller)
-    io = (t["a_reads"] + t["b_reads"]) * in_bytes
-    if controller == "active":
-        c = m * n * out_bytes
-    else:
-        gk = math.ceil(k / blocks.bk)
-        c = ((gk - 1) * 2 + 1) * m * n * acc_bytes  # spills are fp32
-    return io + c
+__all__ = [
+    "VMEM_BYTES", "DEFAULT_VMEM_BUDGET", "LANE", "SUBLANE", "MatmulBlocks",
+    "matmul_traffic", "plan_matmul_blocks", "first_order_block",
+    "conv_blocks_from_partition", "traffic_model_bytes",
+]

@@ -1,9 +1,11 @@
-"""Network-level partition planner: applies the bandwidth model across a whole
-CNN (or any list of contraction layers) and emits a per-layer schedule.
+"""Network-level partition planner — a thin wrapper over ``repro.plan``.
 
-This is what an accelerator compiler front-end would consume: for each layer,
-the chosen (m, n), the iteration counts, the predicted interconnect traffic
-under both controllers, and network totals per strategy.
+``plan_network`` applies the unified planning pipeline across a whole CNN (or
+any list of contraction layers) and emits a per-layer schedule: for each
+layer, the chosen `Schedule`, the iteration counts, the predicted interconnect
+traffic under both controllers, and network totals.
+
+This is what an accelerator compiler front-end would consume.
 """
 
 from __future__ import annotations
@@ -11,18 +13,26 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core import bwmodel
-from repro.core.cnn_zoo import ConvLayer, get_cnn
+from repro.core.cnn_zoo import ConvLayer
+from repro.plan import api as _api
+from repro.plan.schedule import Controller, Partition, Schedule, Strategy
+from repro.plan.traffic import traffic_report
+from repro.plan.workload import ConvWorkload, conv_workloads
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
     layer: ConvLayer
-    partition: bwmodel.Partition
+    schedule: Schedule
     in_iters: int
     out_iters: int
     bw_passive: float
     bw_active: float
+
+    @property
+    def partition(self) -> Partition:
+        """Legacy view of the schedule as the paper's (m, n) partition."""
+        return self.schedule.as_partition()
 
     @property
     def saving_pct(self) -> float:
@@ -53,7 +63,7 @@ class NetworkPlan:
                  f"{'layer':<28}{'m':>5}{'n':>5}{'it_in':>6}{'it_out':>7}"
                  f"{'BW passive':>14}{'BW active':>14}{'save%':>7}"]
         for lp in self.layers:
-            lines.append(f"{lp.layer.name:<28}{lp.partition.m:>5}{lp.partition.n:>5}"
+            lines.append(f"{lp.layer.name:<28}{lp.schedule.m:>5}{lp.schedule.n:>5}"
                          f"{lp.in_iters:>6}{lp.out_iters:>7}"
                          f"{lp.bw_passive:>14.3e}{lp.bw_active:>14.3e}"
                          f"{lp.saving_pct:>7.1f}")
@@ -62,18 +72,39 @@ class NetworkPlan:
         return "\n".join(lines)
 
 
-def plan_network(name: str, p_macs: int, strategy: str = "paper_opt") -> NetworkPlan:
+def plan_network(name_or_layers, p_macs: int,
+                 strategy: "str | Strategy" = "paper_opt") -> NetworkPlan:
+    """Plan every layer of a network.
+
+    Accepts a CNN name from ``core.cnn_zoo`` *or* any iterable of ConvLayers
+    (the seed version was hard-wired to zoo names).
+    """
+    strategy = Strategy.coerce(strategy)
+    if isinstance(name_or_layers, str):
+        name = name_or_layers
+        workloads = conv_workloads(name)
+    else:
+        layers = list(name_or_layers)
+        name = layers[0].name.split(".")[0] if layers else "custom"
+        workloads = tuple(ConvWorkload.from_layer(l) for l in layers)
+
+    # One schedule per layer (chosen under the passive baseline, as in the
+    # paper), evaluated under both controllers.
+    passive = _api.plan_many(workloads, p_macs, strategy, "passive",
+                             exact_iters=True)
     plans = []
-    for layer in get_cnn(name):
-        part = bwmodel.partition_layer(layer, p_macs, strategy)
-        g = layer.groups
-        mg, ng = layer.cin // g, layer.cout // g
-        bw_p = sum(bwmodel.layer_bandwidth(layer, part, "passive", exact_iters=True))
-        bw_a = sum(bwmodel.layer_bandwidth(layer, part, "active", exact_iters=True))
+    for wl, pp in zip(workloads, passive):
+        sched = pp.schedule
+        active_sched = dataclasses.replace(sched, controller=Controller.ACTIVE)
+        bw_active = traffic_report(wl, active_sched,
+                                   exact_iters=True).interconnect_words
+        g = wl.groups
+        mg, ng = wl.cin // g, wl.cout // g
         plans.append(LayerPlan(
-            layer=layer, partition=part,
-            in_iters=math.ceil(mg / min(part.m, mg)),
-            out_iters=math.ceil(ng / min(part.n, ng)),
-            bw_passive=bw_p, bw_active=bw_a))
-    return NetworkPlan(name=name, p_macs=p_macs, strategy=strategy,
+            layer=wl.to_layer(), schedule=sched,
+            in_iters=math.ceil(mg / min(sched.m, mg)),
+            out_iters=math.ceil(ng / min(sched.n, ng)),
+            bw_passive=pp.traffic.interconnect_words,
+            bw_active=bw_active))
+    return NetworkPlan(name=name, p_macs=p_macs, strategy=strategy.value,
                        layers=tuple(plans))

@@ -6,7 +6,7 @@
   conv2d_psum.py      the paper's channel-partitioned conv loop nest on MXU
   flash_attention.py  online-softmax attention (active accumulation for
                       attention partial sums)
-  ops.py              jit wrappers; block shapes from core.partitioner
+  ops.py              jit wrappers; schedules from the repro.plan planner
   ref.py              pure-jnp oracles (tests assert allclose in interpret
                       mode across shape/dtype sweeps)
 """

@@ -1,0 +1,11 @@
+"""Version compat for Pallas TPU APIs.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+jax releases; the kernels are written against the new name and this alias
+keeps them working on the older runtime baked into this container.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.kernels.psum_matmul import ACTIVATIONS
 
 
@@ -63,13 +65,19 @@ def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kk: int, stride: int,
         o_ref[...] = ACTIVATIONS[act](acc_ref[...]).reshape(n, ho, wo).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "stride",
-                                             "act", "interpret"))
-def conv2d_psum(x: jax.Array, w: jax.Array, *, block_m: int = 32,
+@functools.partial(jax.jit, static_argnames=("schedule", "block_m", "block_n",
+                                             "stride", "act", "interpret"))
+def conv2d_psum(x: jax.Array, w: jax.Array, *, schedule=None, block_m: int = 32,
                 block_n: int = 32, stride: int = 1, act: str = "none",
                 interpret: bool = True) -> jax.Array:
     """Partitioned conv for a single image: x (Cin, Hp, Wp) already padded,
-    w (Cout, Cin, K, K). block_m/block_n are the paper's m and n."""
+    w (Cout, Cin, K, K). Pass a ``repro.plan.Schedule`` (kind="conv") as
+    ``schedule=`` — its (m, n) channel blocks override block_m/block_n (this
+    kernel always accumulates VMEM-resident, i.e. the active controller)."""
+    if schedule is not None:
+        if schedule.kind != "conv":
+            raise ValueError(f"conv2d_psum needs a conv schedule, got {schedule}")
+        block_m, block_n = schedule.m, schedule.n
     cin, hp, wp = x.shape
     cout, cin2, kk, _ = w.shape
     assert cin == cin2
@@ -99,7 +107,7 @@ def conv2d_psum(x: jax.Array, w: jax.Array, *, block_m: int = 32,
         out_specs=pl.BlockSpec((bn, ho, wo), lambda co, ci: (co, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((w.shape[0], ho, wo), x.dtype),
         scratch_shapes=[pltpu.VMEM((bn, ho * wo), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

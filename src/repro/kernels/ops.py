@@ -1,8 +1,8 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-These choose block shapes via the partial-sum-aware planner
-(``repro.core.partitioner``) — the paper's partitioning policy applied to
-TPU tiles — and handle padding/layout so callers see plain array ops.
+These choose execution schedules via the unified planner (``repro.plan``) —
+the paper's partitioning policy applied to TPU tiles — and handle
+padding/layout so callers see plain array ops.
 
 ``interpret`` defaults to True because this container is CPU-only; on real
 TPU hardware pass interpret=False (the kernels are written for Mosaic).
@@ -10,14 +10,14 @@ TPU hardware pass interpret=False (the kernels are written for Mosaic).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bwmodel import Partition, partition_layer
-from repro.core.cnn_zoo import ConvLayer
-from repro.core.partitioner import plan_matmul_blocks
+from repro import plan as _plan
+from repro.plan import gemm_model as _gemm
 from repro.kernels import conv2d_psum as _conv
 from repro.kernels import flash_attention as _flash
 from repro.kernels import psum_matmul as _mm
@@ -29,14 +29,17 @@ def matmul(x: jax.Array, w: jax.Array, *, act: str = "none",
     """Partial-sum-scheduled GEMM with planner-chosen blocks."""
     m, k = x.shape
     n = w.shape[1]
-    kwargs = {} if vmem_budget is None else {"vmem_budget": vmem_budget}
-    blocks = plan_matmul_blocks(m, n, k, controller=controller,
-                                max_block=512, **kwargs)
-    return _mm.psum_matmul(x, w, bm=min(blocks.bm, _round_up(m, 8)),
-                           bn=min(blocks.bn, _round_up(n, 128)),
-                           bk=min(blocks.bk, _round_up(k, 128)),
-                           act=act, controller=controller,
-                           interpret=interpret)
+    wl = _plan.MatmulWorkload(m=m, n=n, k=k)
+    sched = _gemm.plan_gemm(
+        wl, vmem_budget if vmem_budget is not None else _plan.DEFAULT_VMEM_BUDGET,
+        _plan.Strategy.EXHAUSTIVE_VMEM, _plan.Controller.coerce(controller),
+        max_block=512)
+    # clamp to the (rounded-up) problem so tiny shapes keep tiny grids
+    sched = dataclasses.replace(
+        sched, bm=min(sched.bm, _round_up(m, 8)),
+        bn=min(sched.bn, _round_up(n, 128)),
+        bk=min(sched.bk, _round_up(k, 128)))
+    return _mm.psum_matmul(x, w, schedule=sched, act=act, interpret=interpret)
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -47,7 +50,7 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int | None = Non
            p_macs: int = 2048, strategy: str = "paper_opt", act: str = "none",
            interpret: bool = True) -> jax.Array:
     """Partitioned conv2d for one image. x: (Cin, H, W), w: (Cout, Cin, K, K).
-    The (m, n) channel partition comes from the paper's strategy at `p_macs`."""
+    The (m, n) channel schedule comes from the paper's strategy at `p_macs`."""
     cin, h, w_sp = x.shape
     cout, _, kk, _ = w.shape
     pad = kk // 2 if pad is None else pad
@@ -55,11 +58,12 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, pad: int | None = Non
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
     hp = h + 2 * pad
     ho = (hp - kk) // stride + 1
-    layer = ConvLayer(name="op", cin=cin, cout=cout, k=kk, wi=h, hi=h,
-                      wo=ho, ho=ho, stride=stride)
-    part: Partition = partition_layer(layer, p_macs, strategy)
-    return _conv.conv2d_psum(x, w, block_m=part.m, block_n=part.n,
-                             stride=stride, act=act, interpret=interpret)
+    wl = _plan.ConvWorkload(name="op", cin=cin, cout=cout, k=kk, wi=h, hi=h,
+                            wo=ho, ho=ho, stride=stride)
+    # The kernel's VMEM-resident accumulator is the active controller.
+    sched = _plan.plan(wl, p_macs, strategy, "active").schedule
+    return _conv.conv2d_psum(x, w, schedule=sched, stride=stride, act=act,
+                             interpret=interpret)
 
 
 def gqa_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

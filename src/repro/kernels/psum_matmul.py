@@ -16,10 +16,11 @@ different levels of the memory hierarchy:
   all output blocks, so each C tile is written to and read back from HBM once
   per reduction step (fp32), exactly the paper's "partial sums must be read
   before being updated". This is the baseline whose traffic the paper (and our
-  ``core.partitioner`` model) charges at ``(2*gk - 1) * M * N`` words.
+  ``repro.plan.gemm_model``) charges at ``(2*gk - 1) * M * N`` words.
 
-Block shapes are chosen by ``repro.core.partitioner.plan_matmul_blocks`` — the
-integer-exact generalization of the paper's eq (7).
+Schedules come from the unified planner: pass ``schedule=`` a
+``repro.plan.Schedule`` (e.g. ``plan.plan(MatmulWorkload(...)).schedule``) —
+the integer-exact generalization of the paper's eq (7).
 
 TARGET: TPU (pl.pallas_call + BlockSpec, MXU-aligned blocks). VALIDATED on CPU
 via interpret=True against ``ref.py``.
@@ -34,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
 
 ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
     "none": lambda x: x,
@@ -81,17 +84,25 @@ def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "act",
-                                             "controller", "interpret",
+@functools.partial(jax.jit, static_argnames=("schedule", "bm", "bn", "bk",
+                                             "act", "controller", "interpret",
                                              "out_dtype"))
-def psum_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
-                bk: int = 256, act: str = "none", controller: str = "active",
-                interpret: bool = True, out_dtype=None) -> jax.Array:
+def psum_matmul(x: jax.Array, w: jax.Array, *, schedule=None, bm: int = 256,
+                bn: int = 256, bk: int = 256, act: str = "none",
+                controller: str = "active", interpret: bool = True,
+                out_dtype=None) -> jax.Array:
     """C = act(x @ w) with explicit partial-sum schedule.
 
     x: (M, K), w: (K, N). Shapes are zero-padded to block multiples; the
-    result is sliced back. ``controller`` selects the grid schedule above.
+    result is sliced back. Pass a ``repro.plan.Schedule`` (kind="matmul") as
+    ``schedule=`` — its blocks and controller override the raw ints; or set
+    ``bm``/``bn``/``bk`` and ``controller`` directly (legacy interface).
     """
+    if schedule is not None:
+        if schedule.kind != "matmul":
+            raise ValueError(f"psum_matmul needs a matmul schedule, got {schedule}")
+        bm, bn, bk = schedule.bm, schedule.bn, schedule.bk
+        controller = schedule.controller.value
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
@@ -114,7 +125,7 @@ def psum_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
             out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "parallel", "arbitrary")),
             interpret=interpret,
         )(xp, wp)
@@ -128,7 +139,7 @@ def psum_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda kk, i, j: (i, j)),
             out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=CompilerParams(
                 dimension_semantics=("arbitrary", "parallel", "parallel")),
             interpret=interpret,
         )(xp, wp)
@@ -144,7 +155,7 @@ def hbm_traffic_bytes(m: int, n: int, k: int, *, bm: int, bn: int, bk: int,
                       controller: str, in_bytes: int = 2,
                       out_bytes: int = 2) -> float:
     """Analytical HBM traffic of the schedules above (validated in tests
-    against core.partitioner.traffic_model_bytes)."""
+    against repro.plan.gemm_model.traffic_model_bytes)."""
     gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
     io = (gn * m * k + gm * k * n) * in_bytes
     if controller == "active":

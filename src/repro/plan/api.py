@@ -1,0 +1,127 @@
+"""The front door: ``plan(workload, budget, strategy, controller) -> Plan``.
+
+One entry point covers both workload kinds — conv channel partitions against
+a MAC budget (the paper's accelerator) and GEMM block shapes against a VMEM
+byte budget (the TPU generalization). Results are LRU-cached on the full
+(workload, budget, strategy, controller) key; workloads are frozen dataclasses
+so the cache key is exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.plan import conv_model
+from repro.plan.planners import get_planner
+from repro.plan.schedule import Controller, Schedule, Strategy
+from repro.plan.traffic import TrafficReport, traffic_report
+from repro.plan.workload import (ConvWorkload, MatmulWorkload, Workload,
+                                 conv_workloads)
+
+DEFAULT_P_MACS = 2048          # the paper's central MAC budget
+_CACHE_SIZE = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A scheduled workload plus its predicted traffic."""
+
+    workload: Workload
+    budget: int
+    schedule: Schedule
+    traffic: TrafficReport
+
+    @property
+    def controller(self) -> Controller:
+        return self.schedule.controller
+
+
+def default_budget(workload: Workload) -> int:
+    """P MACs for convs, VMEM bytes for matmuls."""
+    if isinstance(workload, ConvWorkload):
+        return DEFAULT_P_MACS
+    from repro.plan.gemm_model import DEFAULT_VMEM_BUDGET
+    return DEFAULT_VMEM_BUDGET
+
+
+@functools.lru_cache(maxsize=_CACHE_SIZE)
+def _plan_cached(workload: Workload, budget: int, strategy: Strategy,
+                 controller: Controller, exact_iters: bool) -> Plan:
+    schedule = get_planner(strategy)(workload, budget, controller)
+    report = traffic_report(workload, schedule, exact_iters=exact_iters)
+    return Plan(workload=workload, budget=budget, schedule=schedule,
+                traffic=report)
+
+
+def plan(workload: Workload, budget: int | None = None,
+         strategy: "Strategy | str" = Strategy.PAPER_OPT,
+         controller: "Controller | str" = Controller.PASSIVE,
+         exact_iters: bool = True) -> Plan:
+    """Plan one workload: choose a `Schedule` and predict its traffic.
+
+    budget — P MACs (conv) or VMEM bytes (matmul); None picks the kind's
+    default. ``exact_iters`` selects ceil iteration counts for the conv
+    traffic report (False reproduces the paper's real-valued convention).
+    """
+    if budget is None:
+        budget = default_budget(workload)
+    return _plan_cached(workload, int(budget), Strategy.coerce(strategy),
+                        Controller.coerce(controller), exact_iters)
+
+
+def plan_many(workloads, budget: int | None = None,
+              strategy: "Strategy | str" = Strategy.PAPER_OPT,
+              controller: "Controller | str" = Controller.PASSIVE,
+              exact_iters: bool = True) -> list[Plan]:
+    """Plan a list of workloads (or a named CNN) under one budget."""
+    if isinstance(workloads, str):
+        workloads = conv_workloads(workloads)
+    return [plan(w, budget, strategy, controller, exact_iters)
+            for w in workloads]
+
+
+def plan_cache_info():
+    return _plan_cached.cache_info()
+
+
+def clear_plan_cache() -> None:
+    _plan_cached.cache_clear()
+
+
+# ----------------------------------------------------------- network helpers
+def network_traffic(workloads, budget: int,
+                    strategy: "Strategy | str" = Strategy.PAPER_OPT,
+                    controller: "Controller | str" = Controller.PASSIVE,
+                    exact_iters: bool | None = None,
+                    paper_convention: bool = False) -> float:
+    """Total conv interconnect words for a network at one budget — the
+    quantity of the paper's Tables I/II.
+
+    `paper_convention=True` reproduces the paper's modelling choice of
+    treating grouped/depthwise convolutions as dense reductions (groups
+    ignored). This matches the published tables on MNASNet within ~1%; the
+    groups-aware default is physically correct (depthwise layers have no
+    cross-channel partial sums) and is reported separately as a refinement.
+    `exact_iters=None` keeps the legacy convention: ceil iterations only for
+    the exact search.
+    """
+    if isinstance(workloads, str):
+        workloads = conv_workloads(workloads)
+    strategy = Strategy.coerce(strategy)
+    controller = Controller.coerce(controller)
+    exact = strategy is Strategy.EXACT_OPT if exact_iters is None else exact_iters
+    total = 0.0
+    for wl in workloads:
+        if paper_convention and wl.groups > 1:
+            wl = dataclasses.replace(wl, groups=1)
+        p = plan(wl, budget, strategy, controller, exact_iters=exact)
+        total += p.traffic.interconnect_words
+    return total
+
+
+def min_network_traffic(workloads) -> float:
+    """Table III floor: unlimited MACs (eq 4 with m=M, n=N)."""
+    if isinstance(workloads, str):
+        workloads = conv_workloads(workloads)
+    return conv_model.min_conv_bandwidth(workloads)

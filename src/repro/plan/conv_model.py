@@ -1,0 +1,119 @@
+"""The paper's first-order bandwidth model (eqs 1-7) over `ConvWorkload`.
+
+This is the single implementation of the analytical model; the legacy
+``core.bwmodel`` functions are thin shims over it. Semantics (and numbers)
+are identical to the seed implementation:
+
+  constraint (eq 1):  K^2 * m * n <= P
+  input BW   (eq 2):  B_i = Wi*Hi*M * (N/n)          (re-read per output block)
+  output BW  (eq 3):  B_o = Wo*Ho*N * (2*M/m - 1)    (write + read-before-update)
+  optimum    (eq 7):  m* = sqrt(2*Wo*Ho*P / (Wi*Hi*K^2)), snapped to a factor of M
+
+with the active-memory-controller variant of Section III (B_o = Wo*Ho*N * M/m)
+and per-group handling of grouped/depthwise convolutions.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.plan.schedule import Controller, Schedule, Strategy
+from repro.plan.workload import ConvWorkload
+
+
+def _factors(x: int) -> list[int]:
+    fs = [d for d in range(1, int(math.isqrt(x)) + 1) if x % d == 0]
+    return sorted(set(fs + [x // d for d in fs]))
+
+
+def _snap_to_factor(value: float, total: int, cap: int) -> int:
+    """Snap a real-valued block size to the nearest integer factor of `total`
+    that does not exceed `cap` (the paper's adaptation of eq 7)."""
+    cands = [f for f in _factors(total) if f <= cap]
+    return min(cands, key=lambda f: (abs(f - value), f)) if cands else 1
+
+
+def conv_bandwidth(wl: ConvWorkload, m: int, n: int, controller: Controller,
+                   exact_iters: bool = False) -> tuple[float, float]:
+    """(B_i, B_o) in activations for one layer under an (m, n) partition.
+
+    `exact_iters=True` uses ceil(M/m) iteration counts (valid for any integer
+    m, n); False uses the paper's M/m with m a factor of M.
+    """
+    g = wl.groups
+    mg, ng = wl.cin // g, wl.cout // g
+    m = min(m, mg)
+    n = min(n, ng)
+    out_iters = math.ceil(ng / n) if exact_iters else ng / n
+    in_iters = math.ceil(mg / m) if exact_iters else mg / m
+    b_i = wl.wi * wl.hi * wl.cin * out_iters
+    writes = wl.wo * wl.ho * wl.cout * in_iters
+    if controller is Controller.ACTIVE:
+        b_o = writes                      # controller adds locally; write-only traffic
+    else:
+        b_o = 2 * writes - wl.wo * wl.ho * wl.cout  # + read-before-update
+    return float(b_i), float(b_o)
+
+
+def optimal_m_realvalued(wl: ConvWorkload, p_macs: int,
+                         controller: Controller = Controller.PASSIVE) -> float:
+    """eq (7), and its active-controller refinement (beyond-paper): with free
+    read-back the objective loses the factor 2 -> m* = sqrt(Wo*Ho*P/(Wi*Hi*K^2))."""
+    factor = 2.0 if controller is Controller.PASSIVE else 1.0
+    return math.sqrt(factor * wl.wo * wl.ho * p_macs
+                     / (wl.wi * wl.hi * wl.k * wl.k))
+
+
+def plan_conv(wl: ConvWorkload, p_macs: int, strategy: Strategy,
+              controller: Controller) -> Schedule:
+    """Choose (m, n) for a layer given P MACs under one of the paper's four
+    strategies, or the beyond-paper exact integer search (`EXACT_OPT`).
+
+    For `EXACT_OPT` the objective honours the controller (active controllers
+    shift the optimum: the factor 2 in eq 7 disappears when read-back is free).
+    The four paper strategies are controller-agnostic, as in the paper.
+    """
+    g = wl.groups
+    mg, ng = wl.cin // g, wl.cout // g
+    budget = max(1, p_macs // (wl.k * wl.k))
+
+    # GEMM-flavoured strategy names degrade to their conv equivalents: the
+    # closed form *is* the first-order model, the exact search is exhaustive.
+    if strategy is Strategy.FIRST_ORDER:
+        strategy = Strategy.PAPER_OPT
+    elif strategy is Strategy.EXHAUSTIVE_VMEM:
+        strategy = Strategy.EXACT_OPT
+
+    if strategy is Strategy.MAX_INPUT:
+        m = min(mg, budget)
+        n = min(ng, max(1, budget // m))
+    elif strategy is Strategy.MAX_OUTPUT:
+        n = min(ng, budget)
+        m = min(mg, max(1, budget // n))
+    elif strategy is Strategy.EQUAL:
+        side = max(1, int(math.isqrt(budget)))
+        m = min(mg, side)
+        n = min(ng, max(1, budget // m))
+    elif strategy is Strategy.PAPER_OPT:
+        # eq (7): m* = sqrt(2 * Wo*Ho * P / (Wi*Hi * K^2))
+        m_star = math.sqrt(2.0 * wl.wo * wl.ho * p_macs
+                           / (wl.wi * wl.hi * wl.k * wl.k))
+        m = _snap_to_factor(m_star, mg, cap=min(mg, budget))
+        n = min(ng, max(1, budget // m))  # eq (5): n = P / (K^2 m)
+    elif strategy is Strategy.EXACT_OPT:
+        best_mn, best_b = (1, 1), float("inf")
+        for m in range(1, min(mg, budget) + 1):
+            n = min(ng, max(1, budget // m))
+            b = sum(conv_bandwidth(wl, m, n, controller, exact_iters=True))
+            if b < best_b:
+                best_mn, best_b = (m, n), b
+        m, n = best_mn
+    else:
+        raise ValueError(f"strategy {strategy} is not applicable to convs")
+    return Schedule(kind="conv", bm=m, bn=n, bk=0, controller=controller)
+
+
+def min_conv_bandwidth(workloads) -> float:
+    """Table III: unlimited MACs — each layer reads its input once and writes
+    its output once (eq 4 with m=M, n=N)."""
+    return float(sum(w.in_acts + w.out_acts for w in workloads))

@@ -1,0 +1,167 @@
+"""The paper's traffic model generalized to VMEM-budget GEMM blocking.
+
+Single implementation of the block-shape search; ``core.partitioner`` is a
+thin shim over this module. The objective is the paper's first-order traffic
+model with the constraint swapped (eq 1's P MACs -> a VMEM byte budget):
+
+  paper:  K^2 * m * n                                      <= P MACs
+  here :  bytes(bm,bk) + bytes(bk,bn) + acc_bytes(bm,bn)   <= VMEM budget
+
+Traffic for C[M,N] = A[M,K] @ B[K,N] with grid (M/bm, N/bn, K/bk):
+
+  A reads:  ceil(N/bn) * M * K          (each A block re-read per N block)
+  B reads:  ceil(M/bm) * K * N
+  C,active: M * N                        (accumulator VMEM-resident across k)
+  C,passive: (2*ceil(K/bk) - 1) * M * N  (spill + read-back per k step)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.plan.schedule import Controller, Schedule, Strategy
+from repro.plan.workload import MatmulWorkload
+
+# TPU v5e-ish constants (see roofline/constants.py for the full set).
+VMEM_BYTES = 128 * 1024 * 1024  # 128 MiB VMEM per core (v5e: 128MB unified)
+DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024  # leave headroom for double buffering
+LANE = 128      # last-dim tile (MXU/VPU lane count)
+SUBLANE = 8     # second-to-last tile for fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulBlocks:
+    bm: int
+    bn: int
+    bk: int
+
+    def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4,
+                   double_buffer: bool = True) -> int:
+        mult = 2 if double_buffer else 1   # double-buffered input blocks
+        return (mult * (self.bm * self.bk + self.bk * self.bn) * in_bytes
+                + self.bm * self.bn * acc_bytes)
+
+
+def matmul_traffic(m: int, n: int, k: int, blocks, controller="active"
+                   ) -> dict[str, float]:
+    """HBM traffic in *elements* for the blocked GEMM.
+
+    `blocks` is anything with bm/bn/bk (MatmulBlocks or a matmul Schedule);
+    `controller` coerces from the legacy strings.
+    """
+    controller = Controller.coerce(controller)
+    gi = math.ceil(m / blocks.bm)
+    gj = math.ceil(n / blocks.bn)
+    gk = math.ceil(k / blocks.bk)
+    a_reads = gj * m * k
+    b_reads = gi * k * n
+    if controller is Controller.ACTIVE:
+        c_traffic = m * n
+    else:
+        c_traffic = (2 * gk - 1) * m * n
+    return {"a_reads": float(a_reads), "b_reads": float(b_reads),
+            "c_traffic": float(c_traffic),
+            "total": float(a_reads + b_reads + c_traffic)}
+
+
+def _aligned_candidates(dim: int, align: int, cap: int) -> list[int]:
+    """Hardware-aligned block sizes for a dimension: multiples of `align`,
+    capped at min(dim rounded up, cap)."""
+    top = min(((dim + align - 1) // align) * align, cap)
+    cands = []
+    c = align
+    while c <= top:
+        cands.append(c)
+        c *= 2
+    if top not in cands:
+        cands.append(top)
+    return sorted(set(cands))
+
+
+def plan_matmul_blocks(m: int, n: int, k: int, *, in_bytes: int = 2,
+                       acc_bytes: int = 4, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                       controller="active", max_block: int = 4096) -> MatmulBlocks:
+    """Exact search over hardware-aligned block shapes minimizing HBM traffic
+    under the VMEM budget — the integer-exact analogue of the paper's eq (7).
+
+    First-order intuition (matches eq 7 when the C term dominates): traffic
+    ~ M*N*K*(1/bm + 1/bn) + C-term, so square (bm = bn = sqrt(budget)) output
+    blocks with the largest feasible bk.
+    """
+    controller = Controller.coerce(controller)
+    best: MatmulBlocks | None = None
+    best_t = float("inf")
+    for bm in _aligned_candidates(m, SUBLANE * 16, max_block):      # mult of 128
+        for bn in _aligned_candidates(n, LANE, max_block):
+            for bk in _aligned_candidates(k, LANE, max_block):
+                b = MatmulBlocks(bm, bn, bk)
+                if b.vmem_bytes(in_bytes, acc_bytes) > vmem_budget:
+                    continue
+                t = matmul_traffic(m, n, k, b, controller)["total"]
+                if t < best_t:
+                    best, best_t = b, t
+    if best is None:  # budget smaller than one minimal tile — take minimum
+        best = MatmulBlocks(SUBLANE * 16, LANE, LANE)
+    return best
+
+
+def first_order_block(m: int, n: int, k: int, *, in_bytes: int = 2,
+                      vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                      max_block: int = 4096) -> MatmulBlocks:
+    """Closed-form analogue of the paper's eq (7) for GEMM: with the input
+    terms dominating, minimize 1/bm + 1/bn s.t. bk*(bm+bn)*in_bytes <= V
+    -> bm = bn (the 'square block' rule), bk as large as the leftover allows."""
+    side = min(int(math.sqrt(vmem_budget / (4 * in_bytes))), max_block)
+    bm = max(LANE, (min(side, m) // LANE) * LANE)
+    bn = max(LANE, (min(side, n) // LANE) * LANE)
+    bk_budget = vmem_budget // (2 * in_bytes * (bm + bn))
+    bk = max(LANE, (min(bk_budget, k) // LANE) * LANE)
+    return MatmulBlocks(bm, bn, bk)
+
+
+def conv_blocks_from_partition(m_part: int, n_part: int) -> tuple[int, int]:
+    """Map the paper's (m input maps, n output maps) partition onto channel
+    block sizes for the Pallas conv kernel (snap to lane multiples)."""
+    bm = max(SUBLANE, min(512, 1 << (m_part - 1).bit_length()))
+    bn = max(LANE, min(512, 1 << (n_part - 1).bit_length()))
+    return bm, bn
+
+
+def traffic_model_bytes(m: int, n: int, k: int, blocks, controller,
+                        in_bytes: int = 2, out_bytes: int = 2,
+                        acc_bytes: int = 4) -> float:
+    """Traffic in bytes, distinguishing in/out/accumulator element widths.
+    Passive spills move fp32 accumulators; the active final write is the
+    output dtype — an additional saving the paper's word-count model hides."""
+    controller = Controller.coerce(controller)
+    t = matmul_traffic(m, n, k, blocks, controller)
+    io = (t["a_reads"] + t["b_reads"]) * in_bytes
+    if controller is Controller.ACTIVE:
+        c = m * n * out_bytes
+    else:
+        gk = math.ceil(k / blocks.bk)
+        c = ((gk - 1) * 2 + 1) * m * n * acc_bytes  # spills are fp32
+    return io + c
+
+
+def plan_gemm(wl: MatmulWorkload, vmem_budget: int, strategy: Strategy,
+              controller: Controller, max_block: int = 4096) -> Schedule:
+    """Strategy dispatch for GEMM workloads.
+
+    EXHAUSTIVE_VMEM / EXACT_OPT -> the exact aligned search;
+    FIRST_ORDER / PAPER_OPT / EQUAL -> the closed-form square-block rule
+    (eq 7's analogue; 'equal' because bm = bn). The conv-only max_input /
+    max_output strategies have no GEMM meaning and raise.
+    """
+    if strategy in (Strategy.EXHAUSTIVE_VMEM, Strategy.EXACT_OPT):
+        blocks = plan_matmul_blocks(wl.m, wl.n, wl.k, in_bytes=wl.in_bytes,
+                                    acc_bytes=wl.acc_bytes,
+                                    vmem_budget=vmem_budget,
+                                    controller=controller, max_block=max_block)
+    elif strategy in (Strategy.FIRST_ORDER, Strategy.PAPER_OPT, Strategy.EQUAL):
+        blocks = first_order_block(wl.m, wl.n, wl.k, in_bytes=wl.in_bytes,
+                                   vmem_budget=vmem_budget, max_block=max_block)
+    else:
+        raise ValueError(f"strategy {strategy} is not applicable to matmuls")
+    return Schedule.from_blocks(blocks, controller)

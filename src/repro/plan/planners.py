@@ -1,0 +1,67 @@
+"""`Planner` protocol + registry.
+
+A planner maps (workload, budget, controller) -> `Schedule`. The registry is
+keyed by strategy name so new search policies can be plugged in without
+touching call sites (``repro.plan.plan`` looks planners up here). The built-in
+planners dispatch on workload kind:
+
+  name              conv meaning                 matmul meaning
+  ----------------  ---------------------------  -----------------------------
+  paper_opt         eq (7) closed form           first-order square blocks
+  exact_opt         integer-exact (m, n) search  exhaustive aligned block search
+  first_order       alias of paper_opt           closed-form square blocks
+  exhaustive_vmem   alias of exact_opt           exhaustive aligned block search
+  max_input/max_output/equal                     (conv-only paper baselines)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+from repro.plan import conv_model, gemm_model
+from repro.plan.schedule import Controller, Schedule, Strategy
+from repro.plan.workload import ConvWorkload, MatmulWorkload, Workload
+
+
+class Planner(Protocol):
+    """Anything that turns a budgeted workload into a `Schedule`."""
+
+    def __call__(self, workload: Workload, budget: int,
+                 controller: Controller) -> Schedule: ...
+
+
+PLANNERS: dict[str, Planner] = {}
+
+
+def register_planner(name: str) -> Callable[[Planner], Planner]:
+    def deco(fn: Planner) -> Planner:
+        if name in PLANNERS:
+            raise ValueError(f"planner {name!r} already registered")
+        PLANNERS[name] = fn
+        return fn
+    return deco
+
+
+def get_planner(name: "str | Strategy") -> Planner:
+    key = name.value if isinstance(name, Strategy) else name
+    try:
+        return PLANNERS[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown planner {key!r}; registered: {sorted(PLANNERS)}") from None
+
+
+def _strategy_planner(strategy: Strategy) -> Planner:
+    def planner(workload: Workload, budget: int,
+                controller: Controller) -> Schedule:
+        if isinstance(workload, ConvWorkload):
+            return conv_model.plan_conv(workload, budget, strategy, controller)
+        if isinstance(workload, MatmulWorkload):
+            return gemm_model.plan_gemm(workload, budget, strategy, controller)
+        raise TypeError(f"unknown workload type {type(workload).__name__}")
+    planner.__name__ = f"plan_{strategy.value}"
+    return planner
+
+
+for _s in Strategy:
+    register_planner(_s.value)(_strategy_planner(_s))

@@ -1,0 +1,16 @@
+"""Test-suite bootstrap.
+
+Ensures ``tests/`` is importable (for the vendored ``_hypothesis_stub``) and
+``src/`` is on the path even when pytest is invoked without ``PYTHONPATH=src``
+and the package is not pip-installed.
+"""
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+
+for path in (_HERE, _SRC):
+    if path not in sys.path:
+        sys.path.insert(0, path)

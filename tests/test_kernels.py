@@ -5,8 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:   # optional dep: fall back to the vendored stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.psum_matmul import hbm_traffic_bytes, psum_matmul

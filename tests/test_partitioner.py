@@ -1,8 +1,11 @@
 """Tests for the TPU-side generalization: VMEM-budget matmul block planning."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:   # optional dep: fall back to the vendored stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.partitioner import (DEFAULT_VMEM_BUDGET, MatmulBlocks,
                                     first_order_block, matmul_traffic,
