@@ -2,17 +2,67 @@
 (arch x shape) cells and print before/after roofline terms.
 
 Run AFTER the baseline sweep:
-    PYTHONPATH=src python -m benchmarks.hillclimb [--only CELL]
+    PYTHONPATH=src python -m benchmarks.hillclimb [--only CELL] [--summary]
 
 Each experiment is a (hypothesis, change) pair; results land in
-results/dryrun/*__<tag>.json and are summarized for EXPERIMENTS.md §Perf.
+results/dryrun/*__<tag>.json. The closing summary is a `repro.plan.dse`
+consumer: result records become tidy rows and the winner per cell is read
+off the memory-vs-step-time Pareto frontier (``dse.pareto``) instead of a
+hand-rolled ranking loop.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
+
+
+def result_rows(out_dir: str) -> list[dict]:
+    """results/dryrun/*.json -> tidy rows (one per run) for dse.pareto."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        stem = os.path.basename(path)[:-len(".json")]
+        parts = stem.split("__")
+        if len(parts) not in (3, 4):
+            continue
+        arch, shape, mesh = parts[:3]
+        tag = parts[3] if len(parts) == 4 else "baseline"
+        rec = json.load(open(path))
+        r = rec.get("roofline", {})
+        mem = rec.get("memory", {})
+        t_step = max(r.get("t_compute", 0.0), r.get("t_memory", 0.0),
+                     r.get("t_collective", 0.0))
+        rows.append({
+            "cell": f"{arch}/{shape}/{mesh}", "tag": tag,
+            "t_step": t_step, "t_compute": r.get("t_compute"),
+            "t_memory": r.get("t_memory"),
+            "t_collective": r.get("t_collective"),
+            "bottleneck": r.get("bottleneck"),
+            "peak_gib": mem.get("peak_per_device", 0.0) / 2**30,
+        })
+    return rows
+
+
+def summarize(out_dir: str) -> None:
+    """Per cell: the memory-vs-step-time Pareto frontier of every variant."""
+    from repro.plan import dse
+
+    rows = result_rows(out_dir)
+    if not rows:
+        print(f"(no dry-run records under {out_dir})")
+        return
+    for cell in sorted({r["cell"] for r in rows}):
+        cell_rows = [r for r in rows if r["cell"] == cell]
+        frontier = dse.pareto(cell_rows, x="peak_gib", y="t_step")
+        on_frontier = {id(r) for r in frontier}
+        print(f"\n== {cell}: {len(cell_rows)} variants, "
+              f"{len(frontier)} on the memory/step-time frontier")
+        for r in sorted(cell_rows, key=lambda r: r["t_step"]):
+            mark = "*" if id(r) in on_frontier else " "
+            print(f" {mark} {r['tag']:<14} t_step={r['t_step']:.3e}s "
+                  f"({r['bottleneck']}-bound) peak={r['peak_gib']:.1f}GiB")
 
 
 def experiments():
@@ -80,7 +130,13 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="cell id A/B/C or tag")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--summary", action="store_true",
+                    help="only print the Pareto summary of existing results")
     args = ap.parse_args()
+
+    if args.summary:
+        summarize(args.out)
+        return
 
     from repro.launch.dryrun import run_cell
 
@@ -109,6 +165,8 @@ def main() -> None:
             print(f"  bound {b['bottleneck']} -> {r['bottleneck']}, "
                   f"roofline-frac {b['roofline_fraction']:.2f} -> "
                   f"{r['roofline_fraction']:.2f}")
+
+    summarize(args.out)
 
 
 if __name__ == "__main__":

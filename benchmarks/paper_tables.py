@@ -1,5 +1,6 @@
 """Benchmarks reproducing every table/figure of the paper, driven by the
-unified ``repro.plan`` API.
+``repro.plan.dse`` sweep API (one tidy-row sweep per table instead of a
+hand-rolled enumeration per section).
 
 Each function returns rows and prints ``name,us_per_call,derived`` CSV lines
 (us_per_call = wall time of computing the table entry; derived = the value).
@@ -10,7 +11,9 @@ from __future__ import annotations
 import time
 
 from repro import plan
-from repro.core.cnn_zoo import PAPER_CNNS, PAPER_TABLE3, get_cnn
+from repro.core.cnn_zoo import PAPER_CNNS, PAPER_TABLE3
+from repro.plan import conv_model, dse
+from repro.plan.schedule import Controller
 
 P_TABLE1 = (512, 2048, 16384)
 P_TABLE2 = (512, 1024, 2048, 4096, 8192, 16384)
@@ -37,26 +40,20 @@ def _timed(fn):
 
 def table1() -> list[str]:
     """Table I: BW (M activations) per partition strategy x P x CNN."""
-    rows = []
-    for net in PAPER_CNNS:
-        for p in P_TABLE1:
-            for strat in STRATEGIES:
-                val, us = _timed(lambda: plan.network_traffic(
-                    net, p, strat, paper_convention=True) / 1e6)
-                rows.append(f"table1/{net}/P{p}/{strat},{us:.0f},{val:.2f}")
-    return rows
+    sweep = dse.sweep(PAPER_CNNS, P_TABLE1, STRATEGIES, ("passive",),
+                      paper_convention=True)
+    return [f"table1/{r['network']}/P{r['budget']}/{r['strategy']}"
+            f",{r['us_per_call']:.0f},{r['interconnect_words'] / 1e6:.2f}"
+            for r in sweep]
 
 
 def table2() -> list[str]:
     """Table II: passive vs active controller x P x CNN (paper_opt part.)."""
-    rows = []
-    for net in PAPER_CNNS:
-        for p in P_TABLE2:
-            for ctrl in ("passive", "active"):
-                val, us = _timed(lambda: plan.network_traffic(
-                    net, p, "paper_opt", ctrl, paper_convention=True) / 1e6)
-                rows.append(f"table2/{net}/P{p}/{ctrl},{us:.0f},{val:.2f}")
-    return rows
+    sweep = dse.sweep(PAPER_CNNS, P_TABLE2, ("paper_opt",),
+                      ("passive", "active"), paper_convention=True)
+    return [f"table2/{r['network']}/P{r['budget']}/{r['controller']}"
+            f",{r['us_per_call']:.0f},{r['interconnect_words'] / 1e6:.2f}"
+            for r in sweep]
 
 
 def table3() -> list[str]:
@@ -72,17 +69,18 @@ def table3() -> list[str]:
 
 def fig2() -> list[str]:
     """Fig. 2: % bandwidth saving of the active controller."""
+    sweep = dse.sweep(PAPER_CNNS, P_TABLE2, ("paper_opt",),
+                      ("passive", "active"), paper_convention=True)
+    by_cell = {(r["network"], r["budget"], r["controller"]): r for r in sweep}
     rows = []
     for net in PAPER_CNNS:
         for p in P_TABLE2:
-            def saving():
-                pas = plan.network_traffic(net, p, "paper_opt", "passive",
-                                           paper_convention=True)
-                act = plan.network_traffic(net, p, "paper_opt", "active",
-                                           paper_convention=True)
-                return 100.0 * (1 - act / pas)
-            val, us = _timed(saving)
-            rows.append(f"fig2/{net}/P{p},{us:.0f},{val:.1f}")
+            pas = by_cell[(net, p, "passive")]
+            act = by_cell[(net, p, "active")]
+            saving = 100.0 * (1 - act["interconnect_words"]
+                              / pas["interconnect_words"])
+            us = pas["us_per_call"] + act["us_per_call"]
+            rows.append(f"fig2/{net}/P{p},{us:.0f},{saving:.1f}")
     return rows
 
 
@@ -90,14 +88,62 @@ def beyond_exact_search() -> list[str]:
     """Beyond-paper: integer-exact partition search + groups-aware model +
     active-aware re-optimization (factor 2 in eq 7 drops when reads are
     free)."""
+    paper = dse.sweep(PAPER_CNNS, P_TABLE1, ("paper_opt",), ("passive",),
+                      exact_iters=True)
+    exact = dse.sweep(PAPER_CNNS, P_TABLE1, ("exact_opt",), ("passive",))
+    rows = []
+    for rp, re_ in zip(paper, exact):
+        gain = 100 * (1 - re_["interconnect_words"] / rp["interconnect_words"])
+        us = rp["us_per_call"] + re_["us_per_call"]
+        rows.append(f"beyond/exact_vs_eq7/{rp['network']}/P{rp['budget']}"
+                    f",{us:.0f},{gain:.2f}")
+    return rows
+
+
+def dse_speedup(repeats: int = 5) -> list[str]:
+    """Exact-search speedup: the frozen per-candidate scalar loop vs the
+    vectorized one-shot network batch (`conv_exact_search_batch`), per MAC
+    budget on ResNet-18, plus the across-budgets ResNet-18 total. derived =
+    speedup factor for the ``speedup`` rows, achieved traffic (M activations)
+    otherwise."""
+    rows = []
+    nets = ("resnet18",)
+    total_scalar = total_vec = 0.0
+    for net in nets:
+        wls = plan.conv_workloads(net)
+        for p in P_TABLE1:
+            t_scalar = min(_timed(lambda: [
+                conv_model.plan_conv_exact_scalar(w, p, Controller.PASSIVE)
+                for w in wls])[1] for _ in range(repeats))
+            t_vec = min(_timed(lambda: conv_model.conv_exact_search_batch(
+                wls, p, Controller.PASSIVE))[1] for _ in range(repeats))
+            scalar_mn = [conv_model.plan_conv_exact_scalar(
+                w, p, Controller.PASSIVE) for w in wls]
+            vec_mn = conv_model.conv_exact_search_batch(
+                wls, p, Controller.PASSIVE)
+            assert scalar_mn == vec_mn, "vectorized argmin diverged from loop"
+            traffic = plan.network_traffic(wls, p, "exact_opt") / 1e6
+            total_scalar += t_scalar
+            total_vec += t_vec
+            rows.append(f"dse/exact_scalar/{net}/P{p},{t_scalar:.0f},{traffic:.2f}")
+            rows.append(f"dse/exact_vectorized/{net}/P{p},{t_vec:.0f},{traffic:.2f}")
+            rows.append(f"dse/speedup/{net}/P{p},{t_vec:.0f},"
+                        f"{t_scalar / t_vec:.1f}")
+    rows.append(f"dse/speedup/resnet18/total,{total_vec:.0f},"
+                f"{total_scalar / total_vec:.1f}")
+    return rows
+
+
+def dse_pareto() -> list[str]:
+    """Budget-vs-traffic Pareto frontier (exact search, active controller):
+    the MAC budgets that actually buy bandwidth, per CNN."""
+    budgets = (256, 512, 1024, 2048, 4096, 8192, 16384)
     rows = []
     for net in PAPER_CNNS:
-        workloads = plan.conv_workloads(net)
-        for p in P_TABLE1:
-            paper, us1 = _timed(lambda: plan.network_traffic(
-                workloads, p, "paper_opt", exact_iters=True) / 1e6)
-            exact, us2 = _timed(lambda: plan.network_traffic(
-                workloads, p, "exact_opt") / 1e6)
-            gain = 100 * (1 - exact / paper)
-            rows.append(f"beyond/exact_vs_eq7/{net}/P{p},{us1+us2:.0f},{gain:.2f}")
+        sweep = dse.sweep([net], budgets, ("exact_opt",), ("active",))
+        frontier = dse.pareto(sweep, x="budget", y="interconnect_words")
+        for r in frontier:
+            rows.append(f"pareto/{r['network']}/P{r['budget']}"
+                        f",{r['us_per_call']:.0f}"
+                        f",{r['interconnect_words'] / 1e6:.2f}")
     return rows

@@ -9,6 +9,9 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
   table3  — Table III (minimum bandwidth) + deviation vs paper
   fig2    — Fig. 2    (% saving of the active controller)
   beyond  — beyond-paper exact-search gains
+  dse     — exact-search speedup: scalar loop vs vectorized argmin
+            (the rows committed as BENCH_plan.json)
+  pareto  — MAC-budget-vs-traffic Pareto frontier per CNN
   kernels — VMEM-level active/passive traffic + interpret timings
 
 Usage: python benchmarks/run.py [section] [--json]
@@ -49,6 +52,8 @@ def main(argv: list[str] | None = None) -> None:
         "table3": paper_tables.table3,
         "fig2": paper_tables.fig2,
         "beyond": paper_tables.beyond_exact_search,
+        "dse": paper_tables.dse_speedup,
+        "pareto": paper_tables.dse_pareto,
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }

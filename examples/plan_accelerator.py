@@ -1,6 +1,8 @@
-"""Accelerator design-space exploration with the unified planner: sweep MAC
-budgets and controllers across all eight CNNs, print the layer-level plan for
-one of them, and plan the GEMMs of a transformer config with the same API.
+"""Accelerator design-space exploration with the `repro.plan.dse` API: one
+sweep over CNNs x MAC budgets feeds the summary table AND the per-CNN
+budget-vs-traffic Pareto frontier, the layer-level plan is printed for one
+network, and the same pipeline plans the GEMMs of a transformer config
+against a VMEM budget.
 
   PYTHONPATH=src python examples/plan_accelerator.py [cnn]
 """
@@ -9,14 +11,28 @@ import sys
 from repro import plan
 from repro.core import plan_network
 from repro.core.cnn_zoo import PAPER_CNNS
+from repro.plan import dse
 
 net = sys.argv[1] if len(sys.argv) > 1 else "mobilenet"
+BUDGETS = (512, 2048, 8192, 16384)
 
-print(f"{'CNN':<12}" + "".join(f"{p:>12}" for p in (512, 2048, 8192, 16384)))
+# One tidy sweep drives everything below (exact search, active controller).
+rows = dse.sweep(PAPER_CNNS, BUDGETS, strategies=("exact_opt",),
+                 controllers=("active",))
+by_cell = {(r["network"], r["budget"]): r for r in rows}
+
+print(f"{'CNN':<12}" + "".join(f"{p:>12}" for p in BUDGETS))
 for cnn in PAPER_CNNS:
-    vals = [plan.network_traffic(cnn, p, "exact_opt", "active") / 1e6
-            for p in (512, 2048, 8192, 16384)]
-    print(f"{cnn:<12}" + "".join(f"{v:12.1f}" for v in vals))
+    print(f"{cnn:<12}" + "".join(
+        f"{by_cell[(cnn, p)]['interconnect_words'] / 1e6:12.1f}"
+        for p in BUDGETS))
+
+frontier = dse.pareto([r for r in rows if r["network"] == net],
+                      x="budget", y="interconnect_words")
+print(f"\n# {net} budget-vs-traffic Pareto frontier")
+for r in frontier:
+    print(f"  P={r['budget']:<6} BW={r['interconnect_words'] / 1e6:8.1f}M "
+          f"SRAM={r['sram_reads'] + r['sram_writes']:.3e}")
 
 print()
 print(plan_network(net, 2048).report())
@@ -31,4 +47,5 @@ for wl in plan.transformer_matmuls(cfg, seq_len=4096, batch=1):
     s = p.schedule
     print(f"{wl.name:<28} {wl.m:>8}x{wl.n:<8}x{wl.k:<6} "
           f"blocks=({s.bm},{s.bn},{s.bk}) "
-          f"HBM={p.traffic.bytes/1e9:6.2f}GB")
+          f"VMEM={p.vmem_bytes / 2**20:5.1f}MiB "
+          f"HBM={p.traffic.bytes / 1e9:6.2f}GB")

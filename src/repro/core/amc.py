@@ -174,6 +174,38 @@ def analytical_interconnect_words(layer: ConvLayer, part: "Schedule | Partition"
     return analytical_report(layer, part, active).interconnect_words
 
 
+def validate_sweep(rows, spatial: int = 8, max_rows: int | None = None
+                   ) -> int:
+    """Cross-validate a ``repro.plan.dse.sweep(per_layer=True)`` result set
+    against the instrumented simulator: every dense conv row's schedule is
+    executed through the metered loop nest and its interconnect/SRAM counts
+    must equal the analytical `TrafficReport` exactly.
+
+    Layers are shrunk to ``spatial`` x ``spatial`` maps (channels stay real)
+    so the numpy simulation stays fast; the model is spatial-size-exact, so
+    agreement at the small size is agreement. Grouped convs are skipped (the
+    meter models dense reductions). Returns the number of rows validated.
+    """
+    checked = 0
+    for row in rows:
+        schedule = row.get("schedule")
+        workload = row.get("workload")
+        if schedule is None or workload is None:
+            raise ValueError(
+                "validate_sweep needs per-layer rows: call "
+                "dse.sweep(..., per_layer=True)")
+        if schedule.kind != "conv" or workload.groups > 1:
+            continue
+        if max_rows is not None and checked >= max_rows:
+            break
+        layer = dataclasses.replace(workload.to_layer(), wi=spatial,
+                                    hi=spatial, wo=spatial, ho=spatial,
+                                    stride=1)
+        validate_schedule(layer, schedule)
+        checked += 1
+    return checked
+
+
 def validate_schedule(layer: ConvLayer, schedule: Schedule,
                       rng_seed: int = 0) -> tuple[TrafficMeter, AnalyticalReport]:
     """Execute a `Schedule` on random data and cross-check the instrumented

@@ -12,6 +12,7 @@ Units are *activations* (the paper reports million activations / inference).
 
 from __future__ import annotations
 
+import warnings
 from typing import Iterable
 
 from repro.core.cnn_zoo import ConvLayer, get_cnn
@@ -22,6 +23,20 @@ from repro.plan.workload import ConvWorkload
 
 STRATEGIES = ("max_input", "max_output", "equal", "paper_opt", "exact_opt")
 CONTROLLERS = ("passive", "active")
+
+# Entry points that have already warned this process (one warning per entry
+# point; tests clear this set to re-arm).
+_WARNED: set[str] = set()
+
+
+def _deprecated(entry: str, replacement: str) -> None:
+    if entry in _WARNED:
+        return
+    _WARNED.add(entry)
+    warnings.warn(
+        f"repro.core.bwmodel.{entry} is deprecated; use {replacement}",
+        DeprecationWarning, stacklevel=3)
+
 
 __all__ = [
     "STRATEGIES", "CONTROLLERS", "Partition", "layer_bandwidth",
@@ -36,6 +51,7 @@ def layer_bandwidth(layer: ConvLayer, part: Partition, controller: str = "passiv
 
     Deprecated: use ``repro.plan.traffic_report`` for the full breakdown.
     """
+    _deprecated("layer_bandwidth", "repro.plan.traffic_report")
     return _conv_model.conv_bandwidth(
         ConvWorkload.from_layer(layer), part.m, part.n,
         Controller.coerce(controller), exact_iters)
@@ -44,6 +60,7 @@ def layer_bandwidth(layer: ConvLayer, part: Partition, controller: str = "passiv
 def partition_layer(layer: ConvLayer, p_macs: int, strategy: str = "paper_opt",
                     controller: str = "passive") -> Partition:
     """Choose (m, n) for a layer. Deprecated: use ``repro.plan.plan``."""
+    _deprecated("partition_layer", "repro.plan.plan")
     sched = _conv_model.plan_conv(
         ConvWorkload.from_layer(layer), p_macs,
         Strategy.coerce(strategy), Controller.coerce(controller))
@@ -58,6 +75,7 @@ def network_bandwidth(layers: Iterable[ConvLayer], p_macs: int,
 
     Deprecated: use ``repro.plan.network_traffic``.
     """
+    _deprecated("network_bandwidth", "repro.plan.network_traffic")
     return _api.network_traffic(
         [ConvWorkload.from_layer(l) for l in layers], p_macs, strategy,
         controller, exact_iters=exact_iters, paper_convention=paper_convention)
@@ -68,11 +86,13 @@ def min_bandwidth(layers: Iterable[ConvLayer]) -> float:
 
     Deprecated: use ``repro.plan.min_network_traffic``.
     """
+    _deprecated("min_bandwidth", "repro.plan.min_network_traffic")
     return float(sum(l.in_acts + l.out_acts for l in layers))
 
 
 def network_table(name: str, p_macs: int, strategy: str, controller: str = "passive",
                   paper_convention: bool = False) -> float:
+    _deprecated("network_table", "repro.plan.network_traffic")
     return network_bandwidth(get_cnn(name), p_macs, strategy, controller,
                              paper_convention=paper_convention)
 
@@ -80,5 +100,6 @@ def network_table(name: str, p_macs: int, strategy: str, controller: str = "pass
 def optimal_m_realvalued(layer: ConvLayer, p_macs: int, controller: str = "passive") -> float:
     """eq (7) and its active-controller refinement. Deprecated: see
     ``repro.plan.optimal_m_realvalued``."""
+    _deprecated("optimal_m_realvalued", "repro.plan.optimal_m_realvalued")
     return _conv_model.optimal_m_realvalued(
         ConvWorkload.from_layer(layer), p_macs, Controller.coerce(controller))

@@ -1,8 +1,8 @@
 """DEPRECATED shim — the VMEM-budget GEMM block planner now lives in
 ``repro.plan.gemm_model`` (and the unified entry point is ``repro.plan.plan``
-with a ``MatmulWorkload``). Everything here re-exports that implementation
-unchanged so existing callers/tests keep identical numbers; new code should
-use::
+with a ``MatmulWorkload``). Every callable here delegates to that
+implementation unchanged — identical numbers — and emits a
+`DeprecationWarning` once per entry point; new code should use::
 
     from repro import plan
     p = plan.plan(plan.MatmulWorkload(m, n, k), strategy="exhaustive_vmem",
@@ -12,14 +12,41 @@ use::
 
 from __future__ import annotations
 
+import functools
+import warnings
+
+from repro.plan import gemm_model as _gemm
 from repro.plan.gemm_model import (DEFAULT_VMEM_BUDGET, LANE, SUBLANE,
-                                   VMEM_BYTES, MatmulBlocks,
-                                   conv_blocks_from_partition,
-                                   first_order_block, matmul_traffic,
-                                   plan_matmul_blocks, traffic_model_bytes)
+                                   VMEM_BYTES, MatmulBlocks)
 
 __all__ = [
     "VMEM_BYTES", "DEFAULT_VMEM_BUDGET", "LANE", "SUBLANE", "MatmulBlocks",
     "matmul_traffic", "plan_matmul_blocks", "first_order_block",
     "conv_blocks_from_partition", "traffic_model_bytes",
 ]
+
+# Entry points that have already warned this process (one warning per entry
+# point; tests clear this set to re-arm).
+_WARNED: set[str] = set()
+
+
+def _deprecated_alias(name: str):
+    fn = getattr(_gemm, name)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if name not in _WARNED:
+            _WARNED.add(name)
+            warnings.warn(
+                f"repro.core.partitioner.{name} is deprecated; use "
+                f"repro.plan.gemm_model.{name} (or repro.plan.plan with a "
+                f"MatmulWorkload)", DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return wrapper
+
+
+matmul_traffic = _deprecated_alias("matmul_traffic")
+plan_matmul_blocks = _deprecated_alias("plan_matmul_blocks")
+first_order_block = _deprecated_alias("first_order_block")
+conv_blocks_from_partition = _deprecated_alias("conv_blocks_from_partition")
+traffic_model_bytes = _deprecated_alias("traffic_model_bytes")

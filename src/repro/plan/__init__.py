@@ -22,15 +22,22 @@ simulator executes + cross-validates a `Schedule` against the analytical
 deprecation shims over this package.
 """
 
+from repro.plan import dse, objectives, space
 from repro.plan.api import (DEFAULT_P_MACS, Plan, clear_plan_cache,
-                            default_budget, min_network_traffic,
-                            network_traffic, plan, plan_cache_info, plan_many)
+                            coerce_strategy, default_budget,
+                            min_network_traffic, network_traffic, plan,
+                            plan_cache_info, plan_many)
 from repro.plan.conv_model import optimal_m_realvalued
+from repro.plan.dse import (Constraint, SearchResult, StrategySpec,
+                            register_strategy, unregister_strategy)
 from repro.plan.gemm_model import (DEFAULT_VMEM_BUDGET, LANE, SUBLANE,
                                    VMEM_BYTES, MatmulBlocks)
+from repro.plan.objectives import (OBJECTIVES, Objective, get_objective,
+                                   register_objective)
 from repro.plan.planners import (PLANNERS, Planner, get_planner,
                                  register_planner)
 from repro.plan.schedule import Controller, Partition, Schedule, Strategy
+from repro.plan.space import Candidates, SearchSpace
 from repro.plan.traffic import TrafficReport, traffic_report
 from repro.plan.workload import (ConvWorkload, MatmulWorkload, Workload,
                                  conv_workloads, transformer_matmuls)
@@ -38,10 +45,17 @@ from repro.plan.workload import (ConvWorkload, MatmulWorkload, Workload,
 __all__ = [
     "Plan", "plan", "plan_many", "plan_cache_info", "clear_plan_cache",
     "default_budget", "network_traffic", "min_network_traffic",
+    "coerce_strategy",
     "DEFAULT_P_MACS", "DEFAULT_VMEM_BUDGET", "VMEM_BYTES", "LANE", "SUBLANE",
     "Planner", "PLANNERS", "register_planner", "get_planner",
     "Controller", "Partition", "Schedule", "Strategy",
     "TrafficReport", "traffic_report", "MatmulBlocks",
     "ConvWorkload", "MatmulWorkload", "Workload", "conv_workloads",
     "transformer_matmuls", "optimal_m_realvalued",
+    # --- design-space exploration (repro.plan.dse) ---
+    "dse", "objectives", "space",
+    "Constraint", "SearchResult", "StrategySpec",
+    "register_strategy", "unregister_strategy",
+    "OBJECTIVES", "Objective", "get_objective", "register_objective",
+    "Candidates", "SearchSpace",
 ]

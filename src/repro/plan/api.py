@@ -36,6 +36,17 @@ class Plan:
     def controller(self) -> Controller:
         return self.schedule.controller
 
+    @property
+    def vmem_bytes(self) -> int:
+        """VMEM footprint of a matmul plan with the *workload's* element
+        widths (fp32/int8 workloads report their true footprint, not the
+        bf16/fp32 defaults)."""
+        if not isinstance(self.workload, MatmulWorkload):
+            raise TypeError("vmem_bytes is defined for matmul plans only; "
+                            f"this plan schedules a "
+                            f"{type(self.workload).__name__}")
+        return self.schedule.vmem_bytes(workload=self.workload)
+
 
 def default_budget(workload: Workload) -> int:
     """P MACs for convs, VMEM bytes for matmuls."""
@@ -45,8 +56,26 @@ def default_budget(workload: Workload) -> int:
     return DEFAULT_VMEM_BUDGET
 
 
+def coerce_strategy(value: "Strategy | str") -> "Strategy | str":
+    """Coerce to a `Strategy` enum member, or pass through the name of a
+    custom strategy registered via ``dse.register_strategy`` /
+    ``register_planner`` (strings stay strings so the plan cache keys them)."""
+    if isinstance(value, Strategy):
+        return value
+    try:
+        return Strategy(value)
+    except ValueError:
+        from repro.plan.planners import PLANNERS
+        if value in PLANNERS:
+            return value
+        raise ValueError(
+            f"unknown strategy {value!r}; known: "
+            f"{sorted(set([s.value for s in Strategy]) | set(PLANNERS))}"
+        ) from None
+
+
 @functools.lru_cache(maxsize=_CACHE_SIZE)
-def _plan_cached(workload: Workload, budget: int, strategy: Strategy,
+def _plan_cached(workload: Workload, budget: int, strategy: "Strategy | str",
                  controller: Controller, exact_iters: bool) -> Plan:
     schedule = get_planner(strategy)(workload, budget, controller)
     report = traffic_report(workload, schedule, exact_iters=exact_iters)
@@ -63,10 +92,12 @@ def plan(workload: Workload, budget: int | None = None,
     budget — P MACs (conv) or VMEM bytes (matmul); None picks the kind's
     default. ``exact_iters`` selects ceil iteration counts for the conv
     traffic report (False reproduces the paper's real-valued convention).
+    ``strategy`` accepts the built-in `Strategy` values and any custom name
+    registered through ``repro.plan.dse.register_strategy``.
     """
     if budget is None:
         budget = default_budget(workload)
-    return _plan_cached(workload, int(budget), Strategy.coerce(strategy),
+    return _plan_cached(workload, int(budget), coerce_strategy(strategy),
                         Controller.coerce(controller), exact_iters)
 
 
@@ -74,9 +105,31 @@ def plan_many(workloads, budget: int | None = None,
               strategy: "Strategy | str" = Strategy.PAPER_OPT,
               controller: "Controller | str" = Controller.PASSIVE,
               exact_iters: bool = True) -> list[Plan]:
-    """Plan a list of workloads (or a named CNN) under one budget."""
+    """Plan a list of workloads (or a named CNN) under one budget.
+
+    An all-conv exact search is evaluated as ONE vectorized batch across the
+    whole network (`conv_model.conv_exact_search_batch`) — same schedules as
+    per-layer ``plan()`` calls, one segmented argmin instead of a Python loop
+    per candidate per layer.
+    """
     if isinstance(workloads, str):
         workloads = conv_workloads(workloads)
+    workloads = list(workloads)
+    strategy = coerce_strategy(strategy)
+    controller = Controller.coerce(controller)
+    if (strategy in (Strategy.EXACT_OPT, Strategy.EXHAUSTIVE_VMEM)
+            and workloads and all(isinstance(w, ConvWorkload)
+                                  for w in workloads)):
+        p_macs = DEFAULT_P_MACS if budget is None else int(budget)
+        mns = conv_model.conv_exact_search_batch(workloads, p_macs, controller)
+        plans = []
+        for wl, (m, n) in zip(workloads, mns):
+            schedule = Schedule(kind="conv", bm=m, bn=n, bk=0,
+                                controller=controller)
+            plans.append(Plan(workload=wl, budget=p_macs, schedule=schedule,
+                              traffic=traffic_report(wl, schedule,
+                                                     exact_iters=exact_iters)))
+        return plans
     return [plan(w, budget, strategy, controller, exact_iters)
             for w in workloads]
 
@@ -108,16 +161,13 @@ def network_traffic(workloads, budget: int,
     """
     if isinstance(workloads, str):
         workloads = conv_workloads(workloads)
-    strategy = Strategy.coerce(strategy)
+    strategy = coerce_strategy(strategy)
     controller = Controller.coerce(controller)
     exact = strategy is Strategy.EXACT_OPT if exact_iters is None else exact_iters
-    total = 0.0
-    for wl in workloads:
-        if paper_convention and wl.groups > 1:
-            wl = dataclasses.replace(wl, groups=1)
-        p = plan(wl, budget, strategy, controller, exact_iters=exact)
-        total += p.traffic.interconnect_words
-    return total
+    wls = [dataclasses.replace(wl, groups=1)
+           if paper_convention and wl.groups > 1 else wl for wl in workloads]
+    plans = plan_many(wls, budget, strategy, controller, exact_iters=exact)
+    return sum(p.traffic.interconnect_words for p in plans)
 
 
 def min_network_traffic(workloads) -> float:

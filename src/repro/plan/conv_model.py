@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 from repro.plan.schedule import Controller, Schedule, Strategy
 from repro.plan.workload import ConvWorkload
 
@@ -64,26 +66,69 @@ def optimal_m_realvalued(wl: ConvWorkload, p_macs: int,
                      / (wl.wi * wl.hi * wl.k * wl.k))
 
 
-def plan_conv(wl: ConvWorkload, p_macs: int, strategy: Strategy,
-              controller: Controller) -> Schedule:
-    """Choose (m, n) for a layer given P MACs under one of the paper's four
-    strategies, or the beyond-paper exact integer search (`EXACT_OPT`).
+def _bandwidth_terms(mg, ng, in_pref, out_pref, m, n,
+                     controller: Controller, exact_iters: bool):
+    """eqs (2)/(3) over candidate arrays — the one vectorized implementation
+    both `conv_bandwidth_grid` and `conv_exact_search_batch` evaluate.
+    ``mg``/``ng``/``in_pref``/``out_pref`` are per-group channel counts and
+    the Wi*Hi*M / Wo*Ho*N prefactors, scalars or per-candidate arrays."""
+    m_eff = np.minimum(m, mg)
+    n_eff = np.minimum(n, ng)
+    if exact_iters:
+        out_iters = -(-ng // n_eff)        # ceil on int64
+        in_iters = -(-mg // m_eff)
+    else:
+        out_iters = ng / n_eff             # the paper's real-valued convention
+        in_iters = mg / m_eff
+    b_i = in_pref * out_iters
+    writes = out_pref * in_iters
+    if controller is Controller.ACTIVE:
+        b_o = writes
+    else:
+        b_o = 2 * writes - out_pref
+    return b_i, b_o
 
-    For `EXACT_OPT` the objective honours the controller (active controllers
-    shift the optimum: the factor 2 in eq 7 disappears when read-back is free).
-    The four paper strategies are controller-agnostic, as in the paper.
-    """
+
+def conv_bandwidth_grid(wl: ConvWorkload, m, n, controller: Controller,
+                        exact_iters: bool = False
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized `conv_bandwidth`: (B_i, B_o) float64 arrays over candidate
+    arrays ``m``/``n``. Element-for-element bit-identical to the scalar
+    evaluator — every intermediate is the same exact integer (or the same IEEE
+    division) the scalar path computes, just batched."""
+    m = np.asarray(m, dtype=np.int64)
+    n = np.asarray(n, dtype=np.int64)
+    g = wl.groups
+    b_i, b_o = _bandwidth_terms(
+        wl.cin // g, wl.cout // g,
+        wl.wi * wl.hi * wl.cin,            # exact Python ints, as in the
+        wl.wo * wl.ho * wl.cout,           # scalar path
+        m, n, controller, exact_iters)
+    return (np.asarray(b_i, dtype=np.float64),
+            np.asarray(b_o, dtype=np.float64))
+
+
+def conv_exact_candidates(wl: ConvWorkload, p_macs: int
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """The seed exact search's candidate set as arrays, in its iteration
+    order: every integer m in [1, min(M/g, P/K^2)] with the greedy
+    bandwidth-optimal n = min(N/g, max(1, (P/K^2) / m)) of eq (5)."""
     g = wl.groups
     mg, ng = wl.cin // g, wl.cout // g
     budget = max(1, p_macs // (wl.k * wl.k))
+    m = np.arange(1, min(mg, budget) + 1, dtype=np.int64)
+    n = np.minimum(ng, np.maximum(1, budget // m))
+    return m, n
 
-    # GEMM-flavoured strategy names degrade to their conv equivalents: the
-    # closed form *is* the first-order model, the exact search is exhaustive.
-    if strategy is Strategy.FIRST_ORDER:
-        strategy = Strategy.PAPER_OPT
-    elif strategy is Strategy.EXHAUSTIVE_VMEM:
-        strategy = Strategy.EXACT_OPT
 
+def closed_form_mn(wl: ConvWorkload, p_macs: int, strategy: Strategy
+                   ) -> tuple[int, int]:
+    """The paper's four closed-form partition rules (Section II): (m, n) for
+    one layer under ``max_input`` / ``max_output`` / ``equal`` / ``paper_opt``
+    (eq 7 snapped to a factor of M). Exactly the seed formulas."""
+    g = wl.groups
+    mg, ng = wl.cin // g, wl.cout // g
+    budget = max(1, p_macs // (wl.k * wl.k))
     if strategy is Strategy.MAX_INPUT:
         m = min(mg, budget)
         n = min(ng, max(1, budget // m))
@@ -100,17 +145,83 @@ def plan_conv(wl: ConvWorkload, p_macs: int, strategy: Strategy,
                            / (wl.wi * wl.hi * wl.k * wl.k))
         m = _snap_to_factor(m_star, mg, cap=min(mg, budget))
         n = min(ng, max(1, budget // m))  # eq (5): n = P / (K^2 m)
-    elif strategy is Strategy.EXACT_OPT:
-        best_mn, best_b = (1, 1), float("inf")
-        for m in range(1, min(mg, budget) + 1):
-            n = min(ng, max(1, budget // m))
-            b = sum(conv_bandwidth(wl, m, n, controller, exact_iters=True))
-            if b < best_b:
-                best_mn, best_b = (m, n), b
-        m, n = best_mn
     else:
-        raise ValueError(f"strategy {strategy} is not applicable to convs")
-    return Schedule(kind="conv", bm=m, bn=n, bk=0, controller=controller)
+        raise ValueError(f"strategy {strategy} has no conv closed form")
+    return m, n
+
+
+def plan_conv_exact_scalar(wl: ConvWorkload, p_macs: int,
+                           controller: Controller) -> tuple[int, int]:
+    """Frozen pre-vectorization exact search (the seed's per-candidate Python
+    loop). Kept as the parity oracle for the property tests and as the
+    baseline the ``dse`` benchmark section measures the argmin speedup
+    against. Do not optimise."""
+    g = wl.groups
+    mg, ng = wl.cin // g, wl.cout // g
+    budget = max(1, p_macs // (wl.k * wl.k))
+    best_mn, best_b = (1, 1), float("inf")
+    for m in range(1, min(mg, budget) + 1):
+        n = min(ng, max(1, budget // m))
+        b = sum(conv_bandwidth(wl, m, n, controller, exact_iters=True))
+        if b < best_b:
+            best_mn, best_b = (m, n), b
+    return best_mn
+
+
+def conv_exact_search_batch(workloads, p_macs: int, controller: Controller
+                            ) -> list[tuple[int, int]]:
+    """Vectorized exact search over a whole network in one shot: concatenate
+    every layer's candidate set, evaluate eqs (2)/(3) on the flat arrays, and
+    take one segmented argmin. Bit-for-bit the scalar loop's choices (first
+    minimum wins, as strict ``<`` does in the loop)."""
+    workloads = list(workloads)
+    if not workloads:
+        return []
+    cand_m, cand_n, lengths = [], [], []
+    for wl in workloads:
+        m, n = conv_exact_candidates(wl, p_macs)
+        cand_m.append(m)
+        cand_n.append(n)
+        lengths.append(len(m))
+    m = np.concatenate(cand_m)
+    n = np.concatenate(cand_n)
+    seg = np.repeat(np.arange(len(workloads)), lengths)
+
+    def per_wl(fn):
+        return np.repeat(np.fromiter((fn(w) for w in workloads), np.int64,
+                                     len(workloads)), lengths)
+
+    b_i, b_o = _bandwidth_terms(
+        mg=per_wl(lambda w: w.cin // w.groups),
+        ng=per_wl(lambda w: w.cout // w.groups),
+        in_pref=per_wl(lambda w: w.wi * w.hi * w.cin),
+        out_pref=per_wl(lambda w: w.wo * w.ho * w.cout),
+        m=m, n=n, controller=controller, exact_iters=True)
+    cost = (b_i + b_o).astype(np.float64)
+
+    # Segmented first-minimum argmin: stable sort by (segment, cost, position)
+    # then pick each segment's first row.
+    order = np.lexsort((np.arange(cost.size), cost, seg))
+    starts = np.searchsorted(seg[order], np.arange(len(workloads)))
+    best = order[starts]
+    return [(int(m[i]), int(n[i])) for i in best]
+
+
+def plan_conv(wl: ConvWorkload, p_macs: int, strategy: Strategy,
+              controller: Controller) -> Schedule:
+    """Choose (m, n) for a layer given P MACs under one of the paper's four
+    strategies, or the beyond-paper exact integer search (`EXACT_OPT`).
+
+    For `EXACT_OPT` the objective honours the controller (active controllers
+    shift the optimum: the factor 2 in eq 7 disappears when read-back is free).
+    The four paper strategies are controller-agnostic, as in the paper.
+
+    Every strategy is a `repro.plan.dse` preset of (space, constraints,
+    objective); this function is the conv-flavoured entry point to that
+    machinery (lazy import: ``dse`` builds on this module's evaluators).
+    """
+    from repro.plan import dse
+    return dse.plan_with_strategy(wl, p_macs, strategy, controller)
 
 
 def min_conv_bandwidth(workloads) -> float:

@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from repro.plan.schedule import Controller, Schedule, Strategy
 from repro.plan.workload import MatmulWorkload
 
@@ -79,16 +81,76 @@ def _aligned_candidates(dim: int, align: int, cap: int) -> list[int]:
     return sorted(set(cands))
 
 
-def plan_matmul_blocks(m: int, n: int, k: int, *, in_bytes: int = 2,
-                       acc_bytes: int = 4, vmem_budget: int = DEFAULT_VMEM_BUDGET,
-                       controller="active", max_block: int = 4096) -> MatmulBlocks:
-    """Exact search over hardware-aligned block shapes minimizing HBM traffic
-    under the VMEM budget — the integer-exact analogue of the paper's eq (7).
+def aligned_block_candidates(m: int, n: int, k: int, max_block: int = 4096
+                             ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The exhaustive search's (bm, bn, bk) grid as flat int64 arrays, in the
+    seed triple-loop's iteration order (bm-major, then bn, then bk)."""
+    bm, bn, bk = np.meshgrid(
+        np.asarray(_aligned_candidates(m, SUBLANE * 16, max_block), np.int64),
+        np.asarray(_aligned_candidates(n, LANE, max_block), np.int64),
+        np.asarray(_aligned_candidates(k, LANE, max_block), np.int64),
+        indexing="ij")
+    return bm.ravel(), bn.ravel(), bk.ravel()
 
-    First-order intuition (matches eq 7 when the C term dominates): traffic
-    ~ M*N*K*(1/bm + 1/bn) + C-term, so square (bm = bn = sqrt(budget)) output
-    blocks with the largest feasible bk.
-    """
+
+def vmem_bytes_grid(bm, bn, bk, in_bytes: int = 2, acc_bytes: int = 4,
+                    double_buffer: bool = True) -> np.ndarray:
+    """Vectorized ``MatmulBlocks.vmem_bytes`` over candidate arrays."""
+    bm = np.asarray(bm, np.int64)
+    bn = np.asarray(bn, np.int64)
+    bk = np.asarray(bk, np.int64)
+    mult = 2 if double_buffer else 1
+    return (mult * (bm * bk + bk * bn) * in_bytes + bm * bn * acc_bytes)
+
+
+def matmul_traffic_grid(m: int, n: int, k: int, bm, bn, bk,
+                        controller="active") -> dict[str, np.ndarray]:
+    """Vectorized `matmul_traffic` over candidate block arrays; the ``total``
+    entry is bit-identical to the scalar evaluator element-for-element
+    (exact int64 arithmetic, one final float conversion)."""
+    controller = Controller.coerce(controller)
+    bm = np.asarray(bm, np.int64)
+    bn = np.asarray(bn, np.int64)
+    bk = np.asarray(bk, np.int64)
+    gi = -(-m // bm)
+    gj = -(-n // bn)
+    gk = -(-k // bk)
+    a_reads = gj * (m * k)
+    b_reads = gi * (k * n)
+    if controller is Controller.ACTIVE:
+        c_traffic = np.full_like(a_reads, m * n)
+    else:
+        c_traffic = (2 * gk - 1) * (m * n)
+    return {"a_reads": a_reads.astype(np.float64),
+            "b_reads": b_reads.astype(np.float64),
+            "c_traffic": c_traffic.astype(np.float64),
+            "total": (a_reads + b_reads + c_traffic).astype(np.float64)}
+
+
+def traffic_model_bytes_grid(m: int, n: int, k: int, bm, bn, bk, controller,
+                             in_bytes: int = 2, out_bytes: int = 2,
+                             acc_bytes: int = 4) -> np.ndarray:
+    """Vectorized `traffic_model_bytes` over candidate block arrays — the one
+    dtype-weighted byte model the `repro.plan.objectives` cost functions
+    share. Passive spills move fp32 accumulators; the active final write is
+    the output dtype."""
+    controller = Controller.coerce(controller)
+    t = matmul_traffic_grid(m, n, k, bm, bn, bk, controller)
+    io = (t["a_reads"] + t["b_reads"]) * in_bytes
+    if controller is Controller.ACTIVE:
+        return io + float(m * n * out_bytes)
+    gk = -(-k // np.asarray(bk, np.int64))
+    return io + ((gk - 1) * 2 + 1) * (m * n) * acc_bytes
+
+
+def plan_matmul_blocks_scalar(m: int, n: int, k: int, *, in_bytes: int = 2,
+                              acc_bytes: int = 4,
+                              vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                              controller="active",
+                              max_block: int = 4096) -> MatmulBlocks:
+    """Frozen pre-vectorization exhaustive search (the seed's triple Python
+    loop). Parity oracle for the property tests and the benchmark baseline.
+    Do not optimise."""
     controller = Controller.coerce(controller)
     best: MatmulBlocks | None = None
     best_t = float("inf")
@@ -104,6 +166,26 @@ def plan_matmul_blocks(m: int, n: int, k: int, *, in_bytes: int = 2,
     if best is None:  # budget smaller than one minimal tile — take minimum
         best = MatmulBlocks(SUBLANE * 16, LANE, LANE)
     return best
+
+
+def plan_matmul_blocks(m: int, n: int, k: int, *, in_bytes: int = 2,
+                       acc_bytes: int = 4, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                       controller="active", max_block: int = 4096) -> MatmulBlocks:
+    """Exact search over hardware-aligned block shapes minimizing HBM traffic
+    under the VMEM budget — the integer-exact analogue of the paper's eq (7),
+    as one masked argmin over the aligned candidate grid (`repro.plan.dse`).
+
+    First-order intuition (matches eq 7 when the C term dominates): traffic
+    ~ M*N*K*(1/bm + 1/bn) + C-term, so square (bm = bn = sqrt(budget)) output
+    blocks with the largest feasible bk.
+    """
+    from repro.plan import dse, space
+    wl = MatmulWorkload(m=m, n=n, k=k, in_bytes=in_bytes, acc_bytes=acc_bytes)
+    res = dse.search(wl, vmem_budget, space=space.AlignedBlockSpace(max_block),
+                     constraints=(dse.VmemBudget(),),
+                     objective="interconnect_words",
+                     controller=Controller.coerce(controller))
+    return res.schedule.as_blocks()
 
 
 def first_order_block(m: int, n: int, k: int, *, in_bytes: int = 2,
@@ -153,15 +235,10 @@ def plan_gemm(wl: MatmulWorkload, vmem_budget: int, strategy: Strategy,
     FIRST_ORDER / PAPER_OPT / EQUAL -> the closed-form square-block rule
     (eq 7's analogue; 'equal' because bm = bn). The conv-only max_input /
     max_output strategies have no GEMM meaning and raise.
+
+    Like `plan_conv`, every strategy is a `repro.plan.dse` preset of
+    (space, constraints, objective); this is the GEMM-flavoured entry point.
     """
-    if strategy in (Strategy.EXHAUSTIVE_VMEM, Strategy.EXACT_OPT):
-        blocks = plan_matmul_blocks(wl.m, wl.n, wl.k, in_bytes=wl.in_bytes,
-                                    acc_bytes=wl.acc_bytes,
-                                    vmem_budget=vmem_budget,
-                                    controller=controller, max_block=max_block)
-    elif strategy in (Strategy.FIRST_ORDER, Strategy.PAPER_OPT, Strategy.EQUAL):
-        blocks = first_order_block(wl.m, wl.n, wl.k, in_bytes=wl.in_bytes,
-                                   vmem_budget=vmem_budget, max_block=max_block)
-    else:
-        raise ValueError(f"strategy {strategy} is not applicable to matmuls")
-    return Schedule.from_blocks(blocks, controller)
+    from repro.plan import dse
+    return dse.plan_with_strategy(wl, vmem_budget, strategy, controller,
+                                  max_block=max_block)

@@ -1,0 +1,174 @@
+"""`Objective`: first-class, registrable cost functions over candidate grids.
+
+An objective maps ``(workload, Candidates, controller) -> float64 cost
+array`` — one cost per candidate, computed with array code so an exact search
+is a single masked argmin. Register custom objectives with
+``@register_objective("name")`` and they drive ``plan()`` (via a
+``dse.register_strategy`` preset) and ``dse.sweep(objective=...)`` without
+touching any `repro.plan` internals.
+
+Built-ins:
+
+  interconnect_words  the paper's BW (eqs 2+3 for convs, the blocked-GEMM
+                      A/B/C word traffic for matmuls) — the default, and the
+                      objective every built-in search Strategy minimizes
+  sram_accesses       accesses at the accumulator-owning memory (controller
+                      SRAM / VMEM), mirroring `plan.traffic`'s meter model
+  energy_bytes        energy-weighted bytes: interconnect transfers cost
+                      ~8x an SRAM access per byte (Horowitz-style ratio), so
+                      this trades bus words against local accesses
+  roofline_latency    max(compute, memory) time on the `repro.roofline`
+                      machine model — latency, not traffic, as the target
+
+All objectives use ceil iteration counts (``exact_iters=True``, the
+executable semantics) — identical to what the seed exact searches minimized.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import numpy as np
+
+from repro.plan import conv_model, gemm_model
+from repro.plan.schedule import Controller
+from repro.plan.space import Candidates
+from repro.plan.workload import ConvWorkload, MatmulWorkload, Workload
+from repro.roofline.constants import HBM_BW, PEAK_FLOPS_BF16
+
+ObjectiveFn = Callable[[Workload, Candidates, Controller], np.ndarray]
+Objective = Union[str, ObjectiveFn]
+
+# Relative energy weights, pJ/byte: moving a byte across the SoC interconnect
+# (or HBM) costs roughly an order of magnitude more than an SRAM access
+# (Horowitz, ISSCC'14 scale). Only the ratio matters for argmin.
+ENERGY_PJ_INTERCONNECT_BYTE = 2.0
+ENERGY_PJ_SRAM_BYTE = 0.25
+
+OBJECTIVES: dict[str, ObjectiveFn] = {}
+
+
+def register_objective(name: str) -> Callable[[ObjectiveFn], ObjectiveFn]:
+    """Register a vectorized cost function under ``name``."""
+    def deco(fn: ObjectiveFn) -> ObjectiveFn:
+        if name in OBJECTIVES:
+            raise ValueError(f"objective {name!r} already registered")
+        OBJECTIVES[name] = fn
+        return fn
+    return deco
+
+
+def get_objective(objective: Objective) -> ObjectiveFn:
+    if callable(objective):
+        return objective
+    try:
+        return OBJECTIVES[objective]
+    except KeyError:
+        raise KeyError(f"unknown objective {objective!r}; "
+                       f"registered: {sorted(OBJECTIVES)}") from None
+
+
+def _kind_error(fn_name: str, wl) -> TypeError:
+    return TypeError(f"objective {fn_name} got unsupported workload "
+                     f"{type(wl).__name__}")
+
+
+# --------------------------------------------------------------- interconnect
+@register_objective("interconnect_words")
+def interconnect_words(wl: Workload, cands: Candidates,
+                       controller: Controller) -> np.ndarray:
+    """Words crossing the interconnect/HBM — the paper's BW objective."""
+    if isinstance(wl, ConvWorkload):
+        b_i, b_o = conv_model.conv_bandwidth_grid(
+            wl, cands.bm, cands.bn, controller, exact_iters=True)
+        return b_i + b_o
+    if isinstance(wl, MatmulWorkload):
+        return gemm_model.matmul_traffic_grid(
+            wl.m, wl.n, wl.k, cands.bm, cands.bn, cands.bk,
+            controller)["total"]
+    raise _kind_error("interconnect_words", wl)
+
+
+# --------------------------------------------------------------- SRAM traffic
+def _conv_sram(wl: ConvWorkload, cands: Candidates, controller: Controller
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """(reads, writes) at the accumulator SRAM — `plan.traffic`'s meter
+    model, vectorized. Identical for both controllers: the active controller
+    moves work off the bus, it does not remove it."""
+    b_i, _ = conv_model.conv_bandwidth_grid(
+        wl, cands.bm, cands.bn, controller, exact_iters=True)
+    g = wl.groups
+    mg = wl.cin // g
+    m_eff = np.minimum(np.asarray(cands.bm, np.int64), mg)
+    in_iters = -(-mg // m_eff)
+    out_acts = wl.out_acts
+    reads = b_i + (in_iters - 1) * out_acts
+    writes = (in_iters * out_acts).astype(np.float64)
+    return reads, writes
+
+
+def _matmul_sram(wl: MatmulWorkload, cands: Candidates
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    gk = -(-wl.k // np.asarray(cands.bk, np.int64))
+    acc = wl.m * wl.n
+    return (((gk - 1) * acc).astype(np.float64),
+            (gk * acc).astype(np.float64))
+
+
+@register_objective("sram_accesses")
+def sram_accesses(wl: Workload, cands: Candidates,
+                  controller: Controller) -> np.ndarray:
+    """Total accumulator-memory accesses (reads + writes)."""
+    if isinstance(wl, ConvWorkload):
+        reads, writes = _conv_sram(wl, cands, controller)
+        return reads + writes
+    if isinstance(wl, MatmulWorkload):
+        reads, writes = _matmul_sram(wl, cands)
+        return reads + writes
+    raise _kind_error("sram_accesses", wl)
+
+
+# ------------------------------------------------------------ weighted energy
+@register_objective("energy_bytes")
+def energy_bytes(wl: Workload, cands: Candidates,
+                 controller: Controller) -> np.ndarray:
+    """Energy-weighted bytes (pJ): interconnect bytes at ~8x the cost of SRAM
+    bytes. Unlike pure word counts this penalizes the passive controller's
+    read-back twice (once on the bus, once in SRAM)."""
+    if isinstance(wl, ConvWorkload):
+        ic_bytes = interconnect_words(wl, cands, controller) * wl.word_bytes
+        reads, writes = _conv_sram(wl, cands, controller)
+        sram_bytes = (reads + writes) * wl.word_bytes
+    elif isinstance(wl, MatmulWorkload):
+        ic_bytes = gemm_model.traffic_model_bytes_grid(
+            wl.m, wl.n, wl.k, cands.bm, cands.bn, cands.bk, controller,
+            in_bytes=wl.in_bytes, out_bytes=wl.out_bytes,
+            acc_bytes=wl.acc_bytes)
+        reads, writes = _matmul_sram(wl, cands)
+        sram_bytes = (reads + writes) * wl.acc_bytes
+    else:
+        raise _kind_error("energy_bytes", wl)
+    return (ic_bytes * ENERGY_PJ_INTERCONNECT_BYTE
+            + sram_bytes * ENERGY_PJ_SRAM_BYTE)
+
+
+# ---------------------------------------------------------- roofline latency
+@register_objective("roofline_latency")
+def roofline_latency(wl: Workload, cands: Candidates,
+                     controller: Controller) -> np.ndarray:
+    """max(compute, memory) seconds on the `repro.roofline` machine model.
+    Compute time is schedule-invariant, so this objective is flat wherever
+    the workload is compute-bound and reduces to byte-minimization where it
+    is bandwidth-bound — exactly the regime the paper targets."""
+    if isinstance(wl, ConvWorkload):
+        flops = 2.0 * wl.macs
+        nbytes = interconnect_words(wl, cands, controller) * wl.word_bytes
+    elif isinstance(wl, MatmulWorkload):
+        flops = float(wl.flops)
+        nbytes = gemm_model.traffic_model_bytes_grid(
+            wl.m, wl.n, wl.k, cands.bm, cands.bn, cands.bk, controller,
+            in_bytes=wl.in_bytes, out_bytes=wl.out_bytes,
+            acc_bytes=wl.acc_bytes)
+    else:
+        raise _kind_error("roofline_latency", wl)
+    return np.maximum(flops / PEAK_FLOPS_BF16, nbytes / HBM_BW)

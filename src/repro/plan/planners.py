@@ -2,25 +2,30 @@
 
 A planner maps (workload, budget, controller) -> `Schedule`. The registry is
 keyed by strategy name so new search policies can be plugged in without
-touching call sites (``repro.plan.plan`` looks planners up here). The built-in
-planners dispatch on workload kind:
+touching call sites (``repro.plan.plan`` looks planners up here). Every
+built-in planner is a thin preset of (space, constraints, objective) resolved
+by ``repro.plan.dse.strategy_spec`` and run as one vectorized masked argmin:
 
-  name              conv meaning                 matmul meaning
+  name              conv preset                  matmul preset
   ----------------  ---------------------------  -----------------------------
-  paper_opt         eq (7) closed form           first-order square blocks
-  exact_opt         integer-exact (m, n) search  exhaustive aligned block search
+  paper_opt         eq (7) closed-form point     first-order square blocks
+  exact_opt         exact space + MAC budget     aligned space + VMEM budget
   first_order       alias of paper_opt           closed-form square blocks
-  exhaustive_vmem   alias of exact_opt           exhaustive aligned block search
+  exhaustive_vmem   alias of exact_opt           aligned space + VMEM budget
   max_input/max_output/equal                     (conv-only paper baselines)
+
+Custom presets (including ones built around a user-registered `Objective`)
+enter through ``dse.register_strategy`` and become valid ``strategy=``
+arguments to ``plan()`` without touching this module.
 """
 
 from __future__ import annotations
 
 from typing import Callable, Protocol
 
-from repro.plan import conv_model, gemm_model
+from repro.plan import dse
 from repro.plan.schedule import Controller, Schedule, Strategy
-from repro.plan.workload import ConvWorkload, MatmulWorkload, Workload
+from repro.plan.workload import Workload
 
 
 class Planner(Protocol):
@@ -54,11 +59,7 @@ def get_planner(name: "str | Strategy") -> Planner:
 def _strategy_planner(strategy: Strategy) -> Planner:
     def planner(workload: Workload, budget: int,
                 controller: Controller) -> Schedule:
-        if isinstance(workload, ConvWorkload):
-            return conv_model.plan_conv(workload, budget, strategy, controller)
-        if isinstance(workload, MatmulWorkload):
-            return gemm_model.plan_gemm(workload, budget, strategy, controller)
-        raise TypeError(f"unknown workload type {type(workload).__name__}")
+        return dse.plan_with_strategy(workload, budget, strategy, controller)
     planner.__name__ = f"plan_{strategy.value}"
     return planner
 

@@ -142,7 +142,19 @@ class Schedule:
         from repro.plan.gemm_model import MatmulBlocks
         return MatmulBlocks(bm=self.bm, bn=self.bn, bk=self.bk)
 
-    def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4,
-                   double_buffer: bool = True) -> int:
-        """VMEM footprint of a matmul schedule (input blocks double-buffered)."""
+    def vmem_bytes(self, in_bytes: int | None = None,
+                   acc_bytes: int | None = None,
+                   double_buffer: bool = True, *, workload=None) -> int:
+        """VMEM footprint of a matmul schedule (input blocks double-buffered).
+
+        Element widths resolve in order: explicit ``in_bytes``/``acc_bytes``
+        argument > the ``workload``'s dtype sizes (pass the planned
+        `MatmulWorkload` so fp32/int8 GEMMs report their true footprint) >
+        the bf16-operand/fp32-accumulator defaults.
+        """
+        if workload is not None:
+            in_bytes = workload.in_bytes if in_bytes is None else in_bytes
+            acc_bytes = workload.acc_bytes if acc_bytes is None else acc_bytes
+        in_bytes = 2 if in_bytes is None else in_bytes
+        acc_bytes = 4 if acc_bytes is None else acc_bytes
         return self.as_blocks().vmem_bytes(in_bytes, acc_bytes, double_buffer)
