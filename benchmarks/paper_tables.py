@@ -134,6 +134,30 @@ def dse_speedup(repeats: int = 5) -> list[str]:
     return rows
 
 
+def netplan_savings(smoke: bool = False) -> list[str]:
+    """Network-graph planning: independent-layer (``no_fusion``) totals vs
+    the fused-residency graph planner, per zoo CNN — the inter-layer savings
+    the per-layer model cannot see. derived = M words for the total rows,
+    percent for ``saving_pct``, a count for ``resident_edges``. The rows are
+    committed as ``BENCH_netplan.json`` (``run.py netplan --json``)."""
+    from repro.plan import netplan
+
+    nets = ("alexnet", "squeezenet", "resnet18") if smoke else PAPER_CNNS
+    rows = []
+    for net in nets:
+        (p, us) = _timed(lambda: netplan.plan_graph(
+            net, 2048, "exact_opt", "passive",
+            residency_bytes=netplan.DEFAULT_RESIDENCY_BYTES))
+        rows.append(f"netplan/{net}/no_fusion,{us:.0f}"
+                    f",{p.baseline_words / 1e6:.2f}")
+        rows.append(f"netplan/{net}/fused,{us:.0f}"
+                    f",{p.total_words / 1e6:.2f}")
+        rows.append(f"netplan/{net}/saving_pct,0,{p.saving_pct:.1f}")
+        rows.append(f"netplan/{net}/resident_edges,0"
+                    f",{sum(1 for e in p.edges if e.resident)}")
+    return rows
+
+
 def dse_pareto() -> list[str]:
     """Budget-vs-traffic Pareto frontier (exact search, active controller):
     the MAC budgets that actually buy bandwidth, per CNN."""

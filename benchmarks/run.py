@@ -12,13 +12,19 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
   dse     — exact-search speedup: scalar loop vs vectorized argmin
             (the rows committed as BENCH_plan.json)
   pareto  — MAC-budget-vs-traffic Pareto frontier per CNN
+  netplan — network-graph planning: no_fusion vs fused-residency totals
+            per zoo CNN (with --json, also written to BENCH_netplan.json)
   kernels — VMEM-level active/passive traffic + interpret timings
 
-Usage: python benchmarks/run.py [section] [--json]
+Usage: python benchmarks/run.py [section] [--json] [--smoke]
+
+``--smoke`` runs sections that support it on a reduced network set (CI keeps
+the graph/netplan code paths executing without the full 8-CNN sweep).
 """
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 import sys
@@ -43,6 +49,7 @@ def main(argv: list[str] | None = None) -> None:
 
     argv = sys.argv[1:] if argv is None else argv
     as_json = "--json" in argv
+    smoke = "--smoke" in argv
     pos = [a for a in argv if not a.startswith("-")]
     only = pos[0] if pos else None
 
@@ -54,6 +61,8 @@ def main(argv: list[str] | None = None) -> None:
         "beyond": paper_tables.beyond_exact_search,
         "dse": paper_tables.dse_speedup,
         "pareto": paper_tables.dse_pareto,
+        "netplan": functools.partial(paper_tables.netplan_savings,
+                                     smoke=smoke),
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }
@@ -61,14 +70,23 @@ def main(argv: list[str] | None = None) -> None:
         raise SystemExit(f"unknown section {only!r}; known: {sorted(sections)}")
 
     rows: list[str] = []
+    netplan_rows: list[str] = []
     for name, fn in sections.items():
         if only and name != only:
             continue
-        rows.extend(fn())
+        out = fn()
+        if name == "netplan":
+            netplan_rows = out
+        rows.extend(out)
 
     if as_json:
         json.dump([parse_row(r) for r in rows], sys.stdout, indent=1)
         print()
+        if netplan_rows:
+            # The network-graph perf trajectory is tracked as an artifact.
+            with open("BENCH_netplan.json", "w") as fh:
+                json.dump([parse_row(r) for r in netplan_rows], fh, indent=1)
+                fh.write("\n")
     else:
         print("name,us_per_call,derived")
         for row in rows:

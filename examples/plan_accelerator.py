@@ -37,6 +37,23 @@ for r in frontier:
 print()
 print(plan_network(net, 2048).report())
 
+# Network-graph planning: the per-layer sum treats the feature map layer i
+# writes and layer i+1 re-reads as unavoidable; the graph planner holds
+# edges that fit the residency budget on chip (fused edges).
+from repro.plan import netplan
+
+print(f"\n# network-graph planning @ P=2048, "
+      f"residency={netplan.DEFAULT_RESIDENCY_BYTES / 2**20:.0f}MiB")
+print(f"{'CNN':<12}{'no_fusion':>12}{'fused':>12}{'saving':>9}{'edges':>12}")
+for cnn in PAPER_CNNS:
+    npn = netplan.plan_graph(cnn, 2048, "exact_opt", "passive")
+    nres = sum(1 for e in npn.edges if e.resident)
+    print(f"{cnn:<12}{npn.baseline_words / 1e6:>11.1f}M"
+          f"{npn.total_words / 1e6:>11.1f}M{npn.saving_pct:>8.1f}%"
+          f"{nres:>6}/{len(npn.edges):<5}")
+
+print(f"\n{netplan.plan_graph(net, 2048, 'exact_opt', 'passive').report()}")
+
 # The same pipeline plans transformer GEMMs against a VMEM budget.
 from repro.configs.registry import get_config
 

@@ -19,7 +19,8 @@ from repro.core.bwmodel import (CONTROLLERS, STRATEGIES, Partition,
                                 layer_bandwidth, min_bandwidth,
                                 network_bandwidth, network_table,
                                 optimal_m_realvalued, partition_layer)
-from repro.core.cnn_zoo import PAPER_CNNS, PAPER_TABLE3, ConvLayer, get_cnn
+from repro.core.cnn_zoo import (PAPER_CNNS, PAPER_TABLE3, ConvLayer, get_cnn,
+                                get_cnn_graph_spec)
 from repro.core.partitioner import (MatmulBlocks, first_order_block,
                                     matmul_traffic, plan_matmul_blocks,
                                     traffic_model_bytes)
@@ -29,7 +30,8 @@ __all__ = [
     "CONTROLLERS", "STRATEGIES", "Partition", "layer_bandwidth",
     "min_bandwidth", "network_bandwidth", "network_table",
     "optimal_m_realvalued", "partition_layer", "PAPER_CNNS", "PAPER_TABLE3",
-    "ConvLayer", "get_cnn", "MatmulBlocks", "first_order_block",
+    "ConvLayer", "get_cnn", "get_cnn_graph_spec",
+    "MatmulBlocks", "first_order_block",
     "matmul_traffic", "plan_matmul_blocks", "traffic_model_bytes",
     "NetworkPlan", "plan_network",
 ]

@@ -206,6 +206,175 @@ def validate_sweep(rows, spatial: int = 8, max_rows: int | None = None
     return checked
 
 
+def run_network(graph, schedules: dict[str, Schedule],
+                resident=frozenset(), active: bool | None = None,
+                rng_seed: int = 0) -> tuple[dict, TrafficMeter]:
+    """Walk a conv `NetworkGraph` through instrumented memory, with tensor
+    residency: every conv node runs the partitioned loop nest against a
+    `MemoryController`, and tensors in ``resident`` live in an engine-side
+    residency buffer — their reads/writes are local accesses (counted in the
+    SRAM tallies) that never cross the interconnect. Virtual nodes (pool /
+    add / input) move no modelled traffic, mirroring the analytical
+    convention (`repro.plan.netplan.network_report`), which this function
+    cross-validates word-for-word.
+
+    The graph must be dense (groups == 1) with "same"-padded shapes — use
+    ``NetworkGraph.shrink()`` on real nets; the model is spatial-size-exact.
+    Returns ({tensor name: value}, total TrafficMeter).
+    """
+    rng = np.random.default_rng(rng_seed)
+    resident = frozenset(resident)
+    if active is None:
+        active = any(s.controller is Controller.ACTIVE
+                     for s in schedules.values())
+    values: dict[str, np.ndarray] = {}
+    meter = TrafficMeter()
+    for node in graph.nodes:
+        if node.op == "input":
+            t = graph.tensors[node.out]
+            values[node.out] = rng.standard_normal(
+                (t.channels, t.h, t.w)).astype(np.float32)
+            continue
+        if node.workload is None:
+            ins = [values[t] for t in node.ins]
+            if node.op == "add":
+                values[node.out] = ins[0] + ins[1]
+            elif node.op == "pool":
+                if ins[0].shape != (graph.tensors[node.out].channels,
+                                    graph.tensors[node.out].h,
+                                    graph.tensors[node.out].w):
+                    raise NotImplementedError(
+                        f"{node.name}: shape-changing pools are not "
+                        f"executable; shrink() the graph first")
+                values[node.out] = ins[0]
+            else:
+                raise NotImplementedError(f"virtual op {node.op!r}")
+            continue
+
+        wl = node.workload
+        sched = schedules[node.name]
+        assert wl.groups == 1, "meter model is for dense convs"
+        pad = wl.k // 2
+        if (wl.hi + 2 * pad - wl.k) // wl.stride + 1 != wl.ho:
+            raise ValueError(f"{node.name}: not 'same'-padded; shrink() first")
+        x = np.concatenate([values[t] for t in node.ins], axis=0)
+        w = (rng.standard_normal((wl.cout, wl.cin, wl.k, wl.k))
+             / math.sqrt(wl.cin * wl.k * wl.k)).astype(np.float32)
+        m, n = min(sched.m, wl.cin), min(sched.n, wl.cout)
+        # Input channel ranges of each in-edge, for per-edge bus attribution.
+        spans, off = [], 0
+        for tname in node.ins:
+            c = graph.tensors[tname].channels
+            spans.append((off, off + c, tname in resident))
+            off += c
+        out_ctrl = MemoryController((wl.cout, wl.ho, wl.wo), active)
+        out_res = node.out in resident
+        n_in_blocks = math.ceil(wl.cin / m)
+        for co0 in range(0, wl.cout, n):
+            co1 = min(co0 + n, wl.cout)
+            for bi, ci0 in enumerate(range(0, wl.cin, m)):
+                ci1 = min(ci0 + m, wl.cin)
+                for lo, hi, res in spans:
+                    ov = min(ci1, hi) - max(ci0, lo)
+                    if ov <= 0:
+                        continue
+                    sz = ov * wl.hi * wl.wi
+                    meter.sram_reads += sz          # input SRAM / residency
+                    if not res:
+                        meter.interconnect_words += sz
+                psum = _conv2d_block(x[ci0:ci1], w[co0:co1, ci0:ci1],
+                                     wl.stride, pad)
+                out_ctrl.accumulate(np.s_[co0:co1], psum, first=(bi == 0),
+                                    last=(bi == n_in_blocks - 1))
+        # A resident output does the same accesses in the engine-side buffer;
+        # only the interconnect charge disappears.
+        meter.sram_reads += out_ctrl.meter.sram_reads
+        meter.sram_writes += out_ctrl.meter.sram_writes
+        if not out_res:
+            meter.interconnect_words += out_ctrl.meter.interconnect_words
+        values[node.out] = out_ctrl.sram.copy()
+    return values, meter
+
+
+def _reference_network(graph, values_in: dict, weights: dict) -> dict:
+    """Unpartitioned reference evaluation of the same graph."""
+    values = dict(values_in)
+    for node in graph.nodes:
+        if node.op == "input":
+            continue
+        if node.workload is None:
+            ins = [values[t] for t in node.ins]
+            values[node.out] = ins[0] + ins[1] if node.op == "add" else ins[0]
+            continue
+        wl = node.workload
+        x = np.concatenate([values[t] for t in node.ins], axis=0)
+        values[node.out] = _conv2d_block(x, weights[node.name], wl.stride,
+                                         wl.k // 2)
+    return values
+
+
+def validate_network(graph_or_name, p_macs: int = 2048,
+                     strategy="exact_opt", controller="passive",
+                     residency_bytes: int | None = None, spatial: int = 8,
+                     channel_div: int = 8, rng_seed: int = 0):
+    """Plan a network graph with the fused-residency planner, execute it
+    through the instrumented simulator, and cross-check the analytical
+    network totals exactly — interconnect words, SRAM reads and SRAM writes
+    must all agree, and the executed outputs must match the unpartitioned
+    reference. Zoo names are shrunk (``spatial`` x ``spatial``, channels /
+    ``channel_div``) so the numpy simulation stays fast; the model is
+    spatial-size-exact, so agreement at the small size is agreement.
+
+    ``residency_bytes=None`` defaults to a third of the graph's total tensor
+    bytes, which exercises both resident and spilled edges. Returns
+    (NetPlan, TrafficMeter, TrafficReport) on success; raises AssertionError
+    on any mismatch.
+    """
+    from repro.plan.graph import NetworkGraph
+    from repro.plan.netplan import network_report, plan_graph
+
+    if isinstance(graph_or_name, str):
+        graph = NetworkGraph.from_cnn(graph_or_name).shrink(spatial,
+                                                            channel_div)
+    else:
+        graph = graph_or_name
+    if residency_bytes is None:
+        residency_bytes = sum(t.nbytes for t in graph.tensors.values()) // 3
+    netp = plan_graph(graph, p_macs, strategy, controller,
+                      residency_bytes=residency_bytes)
+    ctrl = Controller.coerce(controller)
+    values, meter = run_network(graph, netp.schedules, netp.resident_tensors,
+                                active=ctrl is Controller.ACTIVE,
+                                rng_seed=rng_seed)
+    report = network_report(graph, netp.schedules, netp.resident_tensors)
+    for field, got in (("interconnect_words", meter.interconnect_words),
+                       ("sram_reads", meter.sram_reads),
+                       ("sram_writes", meter.sram_writes)):
+        want = getattr(report, field)
+        assert got == want, (
+            f"{graph.name} [{ctrl.value}]: metered {field}={got} != "
+            f"model {want}")
+
+    # Replay the same rng stream to rebuild inputs/weights for the reference.
+    rng = np.random.default_rng(rng_seed)
+    values_in, weights = {}, {}
+    for node in graph.nodes:
+        if node.op == "input":
+            t = graph.tensors[node.out]
+            values_in[node.out] = rng.standard_normal(
+                (t.channels, t.h, t.w)).astype(np.float32)
+        elif node.workload is not None:
+            wl = node.workload
+            weights[node.name] = (rng.standard_normal(
+                (wl.cout, wl.cin, wl.k, wl.k))
+                / math.sqrt(wl.cin * wl.k * wl.k)).astype(np.float32)
+    ref = _reference_network(graph, values_in, weights)
+    for tname in graph.outputs:
+        np.testing.assert_allclose(values[tname], ref[tname], rtol=1e-2,
+                                   atol=1e-2)
+    return netp, meter, report
+
+
 def validate_schedule(layer: ConvLayer, schedule: Schedule,
                       rng_seed: int = 0) -> tuple[TrafficMeter, AnalyticalReport]:
     """Execute a `Schedule` on random data and cross-check the instrumented

@@ -9,6 +9,14 @@ programmatically so the layer tables cannot drift from the architectures.
 
 Only convolution layers are emitted (the paper counts conv traffic only);
 pooling ops participate in shape tracking but produce no ConvLayer.
+
+Besides the flat layer list, the tracker records the *network graph*: every
+feature-map tensor and the op that produced it, preserving real branch
+structure (ResNet residual adds, SqueezeNet fire / Inception concats, the
+GoogLeNet pool branch, MobileNetV2/MNASNet inverted-residual skips).
+``get_cnn_graph_spec`` exposes it; ``repro.plan.graph`` builds the typed
+`NetworkGraph` IR from it. The flat ``get_cnn`` list is unchanged — the graph
+is extra structure over the same layers, emitted in the same order.
 """
 
 from __future__ import annotations
@@ -46,8 +54,34 @@ class ConvLayer:
         return (self.wo * self.ho * self.cout * self.cin // self.groups) * self.k * self.k
 
 
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    """Raw network-graph record from the tracker (untyped; see
+    ``repro.plan.graph.NetworkGraph`` for the planning IR).
+
+    tensors — (name, channels, spatial_size) per feature-map tensor, in
+              creation order
+    nodes   — (op, layer_index, input_tensor_names, output_tensor_name) in
+              topological order; op is "input" | "conv" | "pool" | "add";
+              layer_index points into ``layers`` for conv nodes, else None.
+              Concatenation is represented structurally: a consumer that
+              reads a concat simply has several input tensors.
+    """
+
+    name: str
+    layers: tuple[ConvLayer, ...]
+    tensors: tuple[tuple[str, int, int], ...]
+    nodes: tuple[tuple[str, "int | None", tuple[str, ...], str], ...]
+
+
 class _Tracker:
-    """Tiny sequential shape tracker: conv / pool ops on a square image."""
+    """Tiny sequential shape tracker: conv / pool ops on a square image.
+
+    Alongside the flat layer list it records every feature-map tensor and the
+    producing op, so branchy nets keep their real dataflow. Builders express
+    branches by capturing ``t.cur`` (the current tensor bundle) and passing it
+    back as ``src=``; joins use ``concat``/``add``.
+    """
 
     def __init__(self, net: str, size: int = 224, cin: int = 3):
         self.net = net
@@ -55,29 +89,100 @@ class _Tracker:
         self.cin = cin
         self.layers: list[ConvLayer] = []
         self._idx = 0
+        self._aux_idx = 0
+        self.tensors: list[tuple[str, int, int]] = []
+        self.nodes: list[tuple[str, int | None, tuple[str, ...], str]] = []
+        image = self._tensor("image", cin, size)
+        self.nodes.append(("input", None, (), image))
+        self.cur: tuple[str, ...] = (image,)
 
+    # ------------------------------------------------------------- tensors
+    def _tensor(self, name: str, channels: int, size: int) -> str:
+        self.tensors.append((name, channels, size))
+        return name
+
+    def _channels(self, name: str) -> int:
+        return next(c for n, c, _ in self.tensors if n == name)
+
+    def _spatial(self, name: str) -> int:
+        return next(s for n, _, s in self.tensors if n == name)
+
+    # ----------------------------------------------------------------- ops
     def conv(self, cout: int, k: int, stride: int = 1, pad: int | None = None,
              groups: int = 1, name: str | None = None, cin: int | None = None,
-             size_in: int | None = None) -> None:
+             size_in: int | None = None,
+             src: tuple[str, ...] | None = None) -> str:
         if pad is None:
             pad = k // 2 if stride == 1 or k > 1 else 0
         cin = self.cin if cin is None else cin
         wi = self.size if size_in is None else size_in
         wo = (wi + 2 * pad - k) // stride + 1
         self._idx += 1
+        layer_name = name or f"{self.net}.conv{self._idx}"
+        ins = self.cur if src is None else tuple(src)
+        assert sum(self._channels(t) for t in ins) == cin, (
+            f"{layer_name}: input tensors {ins} carry "
+            f"{sum(self._channels(t) for t in ins)} channels, layer needs {cin}")
+        out = self._tensor(f"{layer_name}:out", cout, wo)
+        self.nodes.append(("conv", len(self.layers), ins, out))
         self.layers.append(ConvLayer(
-            name=name or f"{self.net}.conv{self._idx}", cin=cin, cout=cout,
+            name=layer_name, cin=cin, cout=cout,
             k=k, wi=wi, hi=wi, wo=wo, ho=wo, stride=stride, groups=groups))
         if size_in is None:
             self.size = wo
             self.cin = cout
+            self.cur = (out,)
+        return out
 
     def pool(self, k: int = 3, stride: int = 2, pad: int = 0, ceil: bool = False) -> None:
         num = self.size + 2 * pad - k
-        self.size = (math.ceil(num / stride) if ceil else num // stride) + 1
+        new = (math.ceil(num / stride) if ceil else num // stride) + 1
+        outs = []
+        for t in self.cur:
+            self._aux_idx += 1
+            out = self._tensor(f"{self.net}.pool{self._aux_idx}:out",
+                               self._channels(t), new)
+            self.nodes.append(("pool", None, (t,), out))
+            outs.append(out)
+        self.cur = tuple(outs)
+        self.size = new
+
+    def pool_branch(self, src: tuple[str, ...]) -> tuple[str, ...]:
+        """Same-size pool branch (3x3, stride 1, pad 1 — the Inception pool
+        path). Does not advance the main path."""
+        outs = []
+        for t in src:
+            self._aux_idx += 1
+            out = self._tensor(f"{self.net}.pool{self._aux_idx}:out",
+                               self._channels(t), self._spatial(t))
+            self.nodes.append(("pool", None, (t,), out))
+            outs.append(out)
+        return tuple(outs)
+
+    def concat(self, members: tuple[str, ...]) -> None:
+        """Channel concat: no op node — the consumers simply read all member
+        tensors (a concat is a layout convention, not data movement)."""
+        self.cur = tuple(members)
+        self.cin = sum(self._channels(m) for m in members)
+
+    def add(self, a: str, b: str) -> str:
+        """Elementwise residual add of two equal-shape tensors."""
+        ca, cb = self._channels(a), self._channels(b)
+        assert ca == cb, f"add of mismatched channels {a}({ca}) + {b}({cb})"
+        self._aux_idx += 1
+        out = self._tensor(f"{self.net}.add{self._aux_idx}:out", ca,
+                           self._spatial(a))
+        self.nodes.append(("add", None, (a, b), out))
+        self.cur = (out,)
+        self.cin = ca
+        return out
+
+    def spec(self) -> GraphSpec:
+        return GraphSpec(name=self.net, layers=tuple(self.layers),
+                         tensors=tuple(self.tensors), nodes=tuple(self.nodes))
 
 
-def _alexnet() -> list[ConvLayer]:
+def _alexnet() -> _Tracker:
     # torchvision alexnet (one-column variant; matches paper Table III exactly).
     t = _Tracker("alexnet")
     t.conv(64, 11, stride=4, pad=2)
@@ -87,19 +192,19 @@ def _alexnet() -> list[ConvLayer]:
     t.conv(384, 3, pad=1)
     t.conv(256, 3, pad=1)
     t.conv(256, 3, pad=1)
-    return t.layers
+    return t
 
 
-def _vgg16() -> list[ConvLayer]:
+def _vgg16() -> _Tracker:
     t = _Tracker("vgg16")
-    for stage, (reps, cout) in enumerate([(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)]):
+    for reps, cout in [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)]:
         for _ in range(reps):
             t.conv(cout, 3, pad=1)
         t.pool(2, 2)
-    return t.layers
+    return t
 
 
-def _squeezenet() -> list[ConvLayer]:
+def _squeezenet() -> _Tracker:
     # SqueezeNet 1.0 (arXiv:1602.07360, torchvision squeezenet1_0).
     t = _Tracker("squeezenet")
     t.conv(96, 7, stride=2, pad=0)
@@ -107,11 +212,11 @@ def _squeezenet() -> list[ConvLayer]:
 
     def fire(squeeze: int, expand: int) -> None:
         t.conv(squeeze, 1)
-        sq_ch, size = t.cin, t.size
-        t.conv(expand, 1)
+        sq, sq_ch, size = t.cur, t.cin, t.size
+        e1 = t.conv(expand, 1)
         # 3x3 expand branch runs in parallel from the squeeze output.
-        t.conv(expand, 3, pad=1, cin=sq_ch, size_in=size)
-        t.cin = 2 * expand  # concat of the two expand branches
+        e3 = t.conv(expand, 3, pad=1, cin=sq_ch, size_in=size, src=sq)
+        t.concat((e1, e3))  # concat of the two expand branches
 
     fire(16, 64); fire(16, 64); fire(32, 128)
     t.pool(3, 2, ceil=True)
@@ -119,10 +224,10 @@ def _squeezenet() -> list[ConvLayer]:
     t.pool(3, 2, ceil=True)
     fire(64, 256)
     t.conv(1000, 1)  # classifier conv
-    return t.layers
+    return t
 
 
-def _googlenet() -> list[ConvLayer]:
+def _googlenet() -> _Tracker:
     # GoogLeNet (arXiv:1409.4842) with the original 5x5 third branch.
     t = _Tracker("googlenet")
     t.conv(64, 7, stride=2, pad=3)
@@ -132,14 +237,15 @@ def _googlenet() -> list[ConvLayer]:
     t.pool(3, 2, ceil=True)
 
     def inception(b1: int, b2r: int, b2: int, b3r: int, b3: int, b4: int) -> None:
-        cin, size = t.cin, t.size
-        t.conv(b1, 1)
-        t.conv(b2r, 1, cin=cin, size_in=size)
-        t.conv(b2, 3, pad=1, cin=b2r, size_in=size)
-        t.conv(b3r, 1, cin=cin, size_in=size)
-        t.conv(b3, 5, pad=2, cin=b3r, size_in=size)
-        t.conv(b4, 1, cin=cin, size_in=size)   # after pool branch
-        t.cin = b1 + b2 + b3 + b4
+        src, cin, size = t.cur, t.cin, t.size
+        o1 = t.conv(b1, 1)
+        o2r = t.conv(b2r, 1, cin=cin, size_in=size, src=src)
+        o2 = t.conv(b2, 3, pad=1, cin=b2r, size_in=size, src=(o2r,))
+        o3r = t.conv(b3r, 1, cin=cin, size_in=size, src=src)
+        o3 = t.conv(b3, 5, pad=2, cin=b3r, size_in=size, src=(o3r,))
+        pooled = t.pool_branch(src)   # 3x3/s1 pool feeding the 1x1 branch
+        o4 = t.conv(b4, 1, cin=cin, size_in=size, src=pooled)
+        t.concat((o1, o2, o3, o4))
 
     inception(64, 96, 128, 16, 32, 32)
     inception(128, 128, 192, 32, 96, 64)
@@ -152,28 +258,36 @@ def _googlenet() -> list[ConvLayer]:
     t.pool(3, 2, ceil=True)
     inception(256, 160, 320, 32, 128, 128)
     inception(384, 192, 384, 48, 128, 128)
-    return t.layers
+    return t
 
 
-def _resnet(depth: int) -> list[ConvLayer]:
+def _resnet(depth: int) -> _Tracker:
     t = _Tracker(f"resnet{depth}")
     t.conv(64, 7, stride=2, pad=3)
     t.pool(3, 2, pad=1)
 
     def basic(cout: int, stride: int) -> None:
-        cin, size = t.cin, t.size
+        src, cin, size = t.cur, t.cin, t.size
         t.conv(cout, 3, stride=stride, pad=1)
-        t.conv(cout, 3, pad=1)
+        main = t.conv(cout, 3, pad=1)
         if stride != 1 or cin != cout:
-            t.conv(cout, 1, stride=stride, pad=0, cin=cin, size_in=size)
+            shortcut = t.conv(cout, 1, stride=stride, pad=0, cin=cin,
+                              size_in=size, src=src)
+        else:
+            shortcut = src[0]
+        t.add(main, shortcut)
 
     def bottleneck(width: int, stride: int) -> None:
-        cin, size = t.cin, t.size
+        src, cin, size = t.cur, t.cin, t.size
         t.conv(width, 1)
         t.conv(width, 3, stride=stride, pad=1)
-        t.conv(width * 4, 1)
+        main = t.conv(width * 4, 1)
         if stride != 1 or cin != width * 4:
-            t.conv(width * 4, 1, stride=stride, pad=0, cin=cin, size_in=size)
+            shortcut = t.conv(width * 4, 1, stride=stride, pad=0, cin=cin,
+                              size_in=size, src=src)
+        else:
+            shortcut = src[0]
+        t.add(main, shortcut)
 
     if depth == 18:
         plan = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
@@ -186,21 +300,24 @@ def _resnet(depth: int) -> list[ConvLayer]:
     for width, reps, first_stride in plan:
         for i in range(reps):
             block(width, first_stride if i == 0 else 1)
-    return t.layers
+    return t
 
 
-def _mobilenet_v2() -> list[ConvLayer]:
+def _mobilenet_v2() -> _Tracker:
     # MobileNetV2 (arXiv:1801.04381) — the paper's ref [14] is the V2 paper.
     t = _Tracker("mobilenetv2")
     t.conv(32, 3, stride=2, pad=1)
 
     def inverted(cout: int, stride: int, expand: int) -> None:
-        cin = t.cin
+        src, cin = t.cur, t.cin
+        use_res = stride == 1 and cin == cout   # torchvision use_res_connect
         hidden = cin * expand
         if expand != 1:
             t.conv(hidden, 1)
         t.conv(hidden, 3, stride=stride, pad=1, groups=hidden)  # depthwise
-        t.conv(cout, 1)
+        out = t.conv(cout, 1)
+        if use_res:
+            t.add(out, src[0])
 
     cfg = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
            (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
@@ -208,10 +325,10 @@ def _mobilenet_v2() -> list[ConvLayer]:
         for i in range(reps):
             inverted(cout, stride if i == 0 else 1, expand)
     t.conv(1280, 1)
-    return t.layers
+    return t
 
 
-def _mnasnet() -> list[ConvLayer]:
+def _mnasnet() -> _Tracker:
     # MNASNet-B1 depth-multiplier 1.0 (arXiv:1807.11626, torchvision mnasnet1_0).
     t = _Tracker("mnasnet")
     t.conv(32, 3, stride=2, pad=1)
@@ -219,10 +336,14 @@ def _mnasnet() -> list[ConvLayer]:
     t.conv(16, 1)                      # sepconv pointwise
 
     def mb(k: int, cout: int, stride: int, expand: int) -> None:
-        hidden = t.cin * expand
+        src, cin = t.cur, t.cin
+        use_res = stride == 1 and cin == cout   # torchvision _stacks skip
+        hidden = cin * expand
         t.conv(hidden, 1)
         t.conv(hidden, k, stride=stride, pad=k // 2, groups=hidden)
-        t.conv(cout, 1)
+        out = t.conv(cout, 1)
+        if use_res:
+            t.add(out, src[0])
 
     cfg = [(3, 3, 24, 2, 3), (3, 5, 40, 2, 3), (3, 5, 80, 2, 6),
            (2, 3, 96, 1, 6), (4, 5, 192, 2, 6), (1, 3, 320, 1, 6)]
@@ -230,10 +351,10 @@ def _mnasnet() -> list[ConvLayer]:
         for i in range(reps):
             mb(k, cout, stride if i == 0 else 1, expand)
     t.conv(1280, 1)
-    return t.layers
+    return t
 
 
-def _mobilenet_v1() -> list[ConvLayer]:
+def _mobilenet_v1() -> _Tracker:
     # MobileNetV1 (arXiv:1704.04861). The paper cites the V2 paper [14] but its
     # Table III value (10.273M) matches V1 within 0.9% (V2 gives 13.44M), so V1
     # is kept as an auxiliary entry for table validation.
@@ -248,10 +369,10 @@ def _mobilenet_v1() -> list[ConvLayer]:
     for _ in range(5):
         sep(512)
     sep(1024, 2); sep(1024)
-    return t.layers
+    return t
 
 
-_BUILDERS: dict[str, Callable[[], list[ConvLayer]]] = {
+_BUILDERS: dict[str, Callable[[], _Tracker]] = {
     "alexnet": _alexnet,
     "vgg16": _vgg16,
     "squeezenet": _squeezenet,
@@ -275,6 +396,16 @@ PAPER_TABLE3 = {
 
 def get_cnn(name: str) -> list[ConvLayer]:
     try:
-        return _BUILDERS[name]()
+        return list(_BUILDERS[name]().layers)
+    except KeyError:
+        raise KeyError(f"unknown CNN {name!r}; known: {sorted(_BUILDERS)}") from None
+
+
+def get_cnn_graph_spec(name: str) -> GraphSpec:
+    """The network *graph* of a zoo CNN: the same conv layers as ``get_cnn``
+    (same order, same fields) plus the feature-map tensors and the dataflow
+    that connects them (branches, pools, residual adds)."""
+    try:
+        return _BUILDERS[name]().spec()
     except KeyError:
         raise KeyError(f"unknown CNN {name!r}; known: {sorted(_BUILDERS)}") from None

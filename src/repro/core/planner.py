@@ -5,6 +5,13 @@ any list of contraction layers) and emits a per-layer schedule: for each
 layer, the chosen `Schedule`, the iteration counts, the predicted interconnect
 traffic under both controllers, and network totals.
 
+Since the network-graph subsystem (``repro.plan.graph`` /
+``repro.plan.netplan``) this module is a compatibility wrapper: the
+independent-layer answer it returns is exactly the ``no_fusion`` baseline the
+graph planner is pinned against, the returned `NetworkPlan` carries the
+graph's per-edge traffic/residency columns, and passing ``residency_bytes``
+attaches the fused-residency `NetPlan` for the inter-layer savings.
+
 This is what an accelerator compiler front-end would consume.
 """
 
@@ -14,10 +21,11 @@ import dataclasses
 import math
 
 from repro.core.cnn_zoo import ConvLayer
-from repro.plan import api as _api
+from repro.plan import netplan as _netplan
+from repro.plan.graph import NetworkGraph
+from repro.plan.netplan import EdgePlan, NetPlan
 from repro.plan.schedule import Controller, Partition, Schedule, Strategy
 from repro.plan.traffic import traffic_report
-from repro.plan.workload import ConvWorkload, conv_workloads
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +44,8 @@ class LayerPlan:
 
     @property
     def saving_pct(self) -> float:
+        if self.bw_passive == 0:
+            return 0.0
         return 100.0 * (1.0 - self.bw_active / self.bw_passive)
 
 
@@ -45,18 +55,33 @@ class NetworkPlan:
     p_macs: int
     strategy: str
     layers: tuple[LayerPlan, ...]
+    # Network-graph columns: the feature-map edges with their planned traffic
+    # and residency, plus the fused-residency plan when one was requested.
+    edges: tuple[EdgePlan, ...] = ()
+    residency_bytes: int = 0
+    fused: NetPlan | None = None
 
     @property
     def total_passive(self) -> float:
-        return sum(l.bw_passive for l in self.layers)
+        return sum(lp.bw_passive for lp in self.layers)
 
     @property
     def total_active(self) -> float:
-        return sum(l.bw_active for l in self.layers)
+        return sum(lp.bw_active for lp in self.layers)
 
     @property
     def saving_pct(self) -> float:
+        if self.total_passive == 0:
+            return 0.0
         return 100.0 * (1.0 - self.total_active / self.total_passive)
+
+    @property
+    def total_fused(self) -> float:
+        """Fused-residency network words (the no-fusion total when no
+        residency budget was given)."""
+        if self.fused is None:
+            return self.total_passive
+        return self.fused.total_words
 
     def report(self) -> str:
         lines = [f"# plan: {self.name} @ P={self.p_macs} strategy={self.strategy}",
@@ -69,31 +94,39 @@ class NetworkPlan:
                          f"{lp.saving_pct:>7.1f}")
         lines.append(f"{'TOTAL':<28}{'':>23}{self.total_passive:>14.3e}"
                      f"{self.total_active:>14.3e}{self.saving_pct:>7.1f}")
+        if self.fused is not None:
+            lines.append(
+                f"fused-residency ({self.residency_bytes / 2**20:.1f}MiB): "
+                f"{self.fused.total_words:.3e} words "
+                f"({self.fused.saving_pct:.1f}% off the no-fusion baseline, "
+                f"{sum(1 for e in self.edges if e.resident)}/{len(self.edges)}"
+                f" edges resident)")
         return "\n".join(lines)
 
 
 def plan_network(name_or_layers, p_macs: int,
-                 strategy: "str | Strategy" = "paper_opt") -> NetworkPlan:
+                 strategy: "str | Strategy" = "paper_opt",
+                 residency_bytes: int = 0) -> NetworkPlan:
     """Plan every layer of a network.
 
-    Accepts a CNN name from ``core.cnn_zoo`` *or* any iterable of ConvLayers
-    (the seed version was hard-wired to zoo names).
+    Accepts a CNN name from ``core.cnn_zoo`` *or* any iterable of ConvLayers.
+    The per-layer numbers are the independent-layer (``no_fusion``) answer —
+    one schedule per layer chosen under the passive baseline, as in the paper,
+    evaluated under both controllers. ``residency_bytes > 0`` additionally
+    runs the fused-residency graph planner (``repro.plan.netplan``) and
+    attaches it as ``.fused``; the per-edge traffic/residency columns are
+    always populated from the network graph.
     """
     strategy = Strategy.coerce(strategy)
     if isinstance(name_or_layers, str):
-        name = name_or_layers
-        workloads = conv_workloads(name)
+        graph = NetworkGraph.from_cnn(name_or_layers)
     else:
-        layers = list(name_or_layers)
-        name = layers[0].name.split(".")[0] if layers else "custom"
-        workloads = tuple(ConvWorkload.from_layer(l) for l in layers)
+        graph = NetworkGraph.from_layers(list(name_or_layers))
 
-    # One schedule per layer (chosen under the passive baseline, as in the
-    # paper), evaluated under both controllers.
-    passive = _api.plan_many(workloads, p_macs, strategy, "passive",
-                             exact_iters=True)
+    netp = _netplan.plan_graph(graph, p_macs, strategy, Controller.PASSIVE,
+                               residency_bytes=residency_bytes)
     plans = []
-    for wl, pp in zip(workloads, passive):
+    for wl, pp in zip(graph.workloads, netp.baseline):
         sched = pp.schedule
         active_sched = dataclasses.replace(sched, controller=Controller.ACTIVE)
         bw_active = traffic_report(wl, active_sched,
@@ -106,5 +139,7 @@ def plan_network(name_or_layers, p_macs: int,
             out_iters=math.ceil(ng / min(sched.n, ng)),
             bw_passive=pp.traffic.interconnect_words,
             bw_active=bw_active))
-    return NetworkPlan(name=name, p_macs=p_macs, strategy=strategy.value,
-                       layers=tuple(plans))
+    return NetworkPlan(name=graph.name, p_macs=p_macs, strategy=strategy.value,
+                       layers=tuple(plans), edges=netp.edges,
+                       residency_bytes=int(residency_bytes),
+                       fused=netp if residency_bytes > 0 else None)

@@ -4,6 +4,8 @@
                       reduction-innermost grid) vs passive (HBM psum spill,
                       reduction-outermost) schedules + fused activation
   conv2d_psum.py      the paper's channel-partitioned conv loop nest on MXU
+  conv_network.py     whole-network runner: chains conv2d_psum over a
+                      planned repro.plan.graph.NetworkGraph (branches, adds)
   flash_attention.py  online-softmax attention (active accumulation for
                       attention partial sums)
   ops.py              jit wrappers; schedules from the repro.plan planner

@@ -1,0 +1,94 @@
+"""Whole-network kernel runner: chain `conv2d_psum` over a `NetworkGraph`.
+
+The per-layer kernels execute one conv under one `Schedule`; this module
+walks a planned network graph (``repro.plan.netplan.NetPlan`` or an explicit
+{node name: Schedule} mapping) and runs every conv node through the Pallas
+kernel under its planned channel partition, materializing the branch
+structure the graph records — residual adds, fire/inception concats (a
+multi-input conv reads the channel-concatenated branch tensors) and
+shape-preserving pools.
+
+The kernel accumulates in a VMEM-resident fp32 scratch (the active memory
+controller / fused-residency analogue), so this is the executable TPU-side
+counterpart of the planner's residency model. Graphs must be dense
+(groups == 1) with "same"-padded shapes — use ``NetworkGraph.shrink()`` on
+zoo nets; ``interpret=True`` (the default) runs on CPU.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d_psum import conv2d_psum
+
+
+def init_network_params(graph, rng_seed: int = 0) -> dict[str, jax.Array]:
+    """Fan-in-scaled random weights for every conv node: {node name:
+    (Cout, Cin, K, K) float32}."""
+    params: dict[str, jax.Array] = {}
+    key = jax.random.PRNGKey(rng_seed)
+    for node in graph.nodes:
+        wl = node.workload
+        if wl is None:
+            continue
+        key, sub = jax.random.split(key)
+        params[node.name] = (
+            jax.random.normal(sub, (wl.cout, wl.cin, wl.k, wl.k), jnp.float32)
+            / math.sqrt(wl.cin * wl.k * wl.k))
+    return params
+
+
+def run_network_kernels(graph, schedules, params: dict[str, jax.Array],
+                        inputs: dict[str, jax.Array] | None = None,
+                        rng_seed: int = 0, interpret: bool = True
+                        ) -> dict[str, jax.Array]:
+    """Execute every conv of a planned graph with `conv2d_psum`.
+
+    ``schedules`` is a `NetPlan` or a {conv node name: Schedule} mapping
+    (conv-kind schedules; the kernel always accumulates VMEM-resident).
+    Returns {tensor name: value} for every tensor in the graph.
+    """
+    if hasattr(schedules, "schedules"):      # a NetPlan
+        schedules = schedules.schedules
+    values: dict[str, jax.Array] = {}
+    key = jax.random.PRNGKey(rng_seed)
+    for node in graph.nodes:
+        if node.op == "input":
+            if inputs is not None and node.out in inputs:
+                values[node.out] = jnp.asarray(inputs[node.out], jnp.float32)
+            else:
+                t = graph.tensors[node.out]
+                key, sub = jax.random.split(key)
+                values[node.out] = jax.random.normal(
+                    sub, (t.channels, t.h, t.w), jnp.float32)
+            continue
+        if node.workload is None:
+            ins = [values[t] for t in node.ins]
+            if node.op == "add":
+                values[node.out] = ins[0] + ins[1]
+            elif node.op == "pool":
+                t = graph.tensors[node.out]
+                if ins[0].shape != (t.channels, t.h, t.w):
+                    raise NotImplementedError(
+                        f"{node.name}: shape-changing pools are not "
+                        f"executable; shrink() the graph first")
+                values[node.out] = ins[0]
+            else:
+                raise NotImplementedError(f"virtual op {node.op!r}")
+            continue
+        wl = node.workload
+        if wl.groups != 1:
+            raise NotImplementedError("kernel runner is for dense convs")
+        pad = wl.k // 2
+        if (wl.hi + 2 * pad - wl.k) // wl.stride + 1 != wl.ho:
+            raise ValueError(f"{node.name}: not 'same'-padded; shrink() first")
+        x = jnp.concatenate([values[t] for t in node.ins], axis=0)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+        values[node.out] = conv2d_psum(
+            x, params[node.name], schedule=schedules[node.name],
+            stride=wl.stride, interpret=interpret)
+    return values

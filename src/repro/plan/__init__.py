@@ -22,7 +22,10 @@ simulator executes + cross-validates a `Schedule` against the analytical
 deprecation shims over this package.
 """
 
-from repro.plan import dse, objectives, space
+from repro.plan import dse, graph, netplan, objectives, space
+from repro.plan.graph import NetworkGraph, Node, Tensor
+from repro.plan.netplan import (DEFAULT_RESIDENCY_BYTES, EdgePlan, NetPlan,
+                                NodePlan, network_report, plan_graph)
 from repro.plan.api import (DEFAULT_P_MACS, Plan, clear_plan_cache,
                             coerce_strategy, default_budget,
                             min_network_traffic, network_traffic, plan,
@@ -58,4 +61,8 @@ __all__ = [
     "register_strategy", "unregister_strategy",
     "OBJECTIVES", "Objective", "get_objective", "register_objective",
     "Candidates", "SearchSpace",
+    # --- network-graph planning (repro.plan.graph / repro.plan.netplan) ---
+    "graph", "netplan", "NetworkGraph", "Node", "Tensor",
+    "NetPlan", "NodePlan", "EdgePlan", "plan_graph", "network_report",
+    "DEFAULT_RESIDENCY_BYTES",
 ]

@@ -1,0 +1,457 @@
+"""Network-level planner: per-node schedules + fused-residency edges.
+
+The per-layer pipeline minimizes each layer's eq-(2)+(3) traffic in
+isolation, so the feature map layer *i* ships out over the interconnect and
+layer *i+1* immediately ships back in is counted as unavoidable. This module
+plans the whole `NetworkGraph` instead:
+
+  * every producer->consumer **edge** is modelled explicitly — a consumer
+    re-reads each input tensor once per output block (``S_e * ceil(N/n)``
+    words for convs, ``S_e * ceil(N/bn)`` for GEMMs), which is exactly how
+    eq (2) decomposes over the input tensors;
+  * an edge whose tensor fits the **residency budget** (an engine-side buffer,
+    the SoC analogue of the TPU kernels' VMEM accumulator) can be held
+    *resident* for its whole live interval: its producer accumulates locally
+    (the full eq-(3) output traffic stays off the bus) and every consumer
+    reads it locally (the edge's share of eq (2) stays off the bus). Local
+    accesses are still counted — like the active controller, residency moves
+    words off the interconnect, it does not remove the work;
+  * schedules and residency are chosen jointly by a beam search (DP over the
+    topological order with states deduplicated on the live resident set); for
+    a fixed residency assignment the per-node optimum is one masked argmin
+    over the same `repro.plan.dse` candidate grids ``plan()`` searches.
+
+The all-spilled assignment reproduces the independent-layer answer
+bit-for-bit — `NetPlan.baseline` is literally ``plan.plan_many``'s result and
+is pinned as the ``no_fusion`` baseline; `core.amc.run_network` executes a
+plan through the instrumented `MemoryController` + residency buffer and
+cross-validates `network_report` word-for-word.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.plan import api as _api
+from repro.plan import conv_model, dse, gemm_model
+from repro.plan.graph import NetworkGraph, Node
+from repro.plan.schedule import Controller, Schedule, Strategy
+from repro.plan.traffic import TrafficReport
+from repro.plan.workload import ConvWorkload, MatmulWorkload
+
+# Engine-side residency buffer (bytes) available for holding inter-layer
+# feature maps on chip — a few MiB of SRAM, the scale of the paper's SoC.
+DEFAULT_RESIDENCY_BYTES = 2 * 2**20
+DEFAULT_BEAM_WIDTH = 8
+
+
+# ----------------------------------------------------------- per-node grids
+@dataclasses.dataclass(frozen=True)
+class _NodeGrid:
+    """Vectorized per-candidate cost pieces for one workload node.
+
+    For a residency state with ``A`` spilled input words, the node's bus cost
+    over the candidate grid is ``A * read_iters + fixed + spill * out_traffic``
+    (conv: fixed = 0, out_traffic = eq-3 B_o; GEMM: fixed = weight reads,
+    out_traffic = the C-tile traffic). The all-spilled cost with A = all input
+    words is bit-for-bit the per-layer objective ``plan()`` minimizes.
+    """
+
+    cands: dse.Candidates
+    mask: np.ndarray
+    read_iters: np.ndarray     # int64: input re-reads per candidate
+    fixed: np.ndarray          # float64: bus words independent of residency
+    out_traffic: np.ndarray    # float64: output words, elided when resident
+    in_words: int              # total input words across in-edges
+
+    def best(self, spilled_in_words: int, out_spilled: bool
+             ) -> tuple[int, float]:
+        cost = spilled_in_words * self.read_iters + self.fixed
+        if out_spilled:
+            cost = cost + self.out_traffic
+        i = int(np.argmin(np.where(self.mask, cost, np.inf)))
+        return i, float(cost[i])
+
+
+def _node_grid(node: Node, budget: int | None, strategy, controller: Controller,
+               in_words: int) -> _NodeGrid:
+    wl = node.workload
+    budget = _api.default_budget(wl) if budget is None else int(budget)
+    kind = "conv" if isinstance(wl, ConvWorkload) else "matmul"
+    spec = dse.strategy_spec(strategy, kind)
+    cands = spec.space(wl, budget)
+    mask = np.ones(len(cands), dtype=bool)
+    for c in spec.constraints:
+        mask &= c(wl, cands, budget)
+    if not mask.any():
+        fallback = getattr(spec.space, "fallback", None)
+        if fallback is None:
+            raise ValueError(f"no feasible candidate for {wl!r} at {budget}")
+        cands = fallback(wl, budget)
+        mask = np.ones(len(cands), dtype=bool)
+    if kind == "conv":
+        ng = wl.cout // wl.groups
+        read_iters = -(-ng // np.minimum(cands.bn, ng))
+        _, b_o = conv_model.conv_bandwidth_grid(wl, cands.bm, cands.bn,
+                                                controller, exact_iters=True)
+        fixed = np.zeros(len(cands), dtype=np.float64)
+        out_traffic = b_o
+    else:
+        t = gemm_model.matmul_traffic_grid(wl.m, wl.n, wl.k, cands.bm,
+                                           cands.bn, cands.bk, controller)
+        read_iters = -(-wl.n // np.asarray(cands.bn, np.int64))
+        fixed = t["b_reads"]
+        out_traffic = t["c_traffic"]
+    return _NodeGrid(cands=cands, mask=mask, read_iters=read_iters,
+                     fixed=fixed, out_traffic=out_traffic, in_words=in_words)
+
+
+# ------------------------------------------------------- analytical totals
+def _node_bus_report(wl, schedule: Schedule, spilled_in_words: int,
+                     out_spilled: bool) -> TrafficReport:
+    """Residency-adjusted `TrafficReport` for one node: interconnect words
+    drop the resident shares; local (SRAM + residency buffer) accesses match
+    the per-layer meter model unchanged."""
+    if isinstance(wl, ConvWorkload):
+        b_i, b_o = conv_model.conv_bandwidth(wl, schedule.m, schedule.n,
+                                             schedule.controller,
+                                             exact_iters=True)
+        g = wl.groups
+        mg, ng = wl.cin // g, wl.cout // g
+        out_iters = math.ceil(ng / min(schedule.n, ng))
+        in_iters = math.ceil(mg / min(schedule.m, mg))
+        in_bus = float(spilled_in_words * out_iters)
+        out_bus = b_o if out_spilled else 0.0
+        sram_reads = b_i + (in_iters - 1) * wl.out_acts
+        sram_writes = float(in_iters * wl.out_acts)
+        word_bytes = wl.word_bytes
+    elif isinstance(wl, MatmulWorkload):
+        t = gemm_model.matmul_traffic(wl.m, wl.n, wl.k, schedule,
+                                      schedule.controller)
+        gj = math.ceil(wl.n / schedule.bn)
+        gk = math.ceil(wl.k / schedule.bk)
+        in_bus = float(spilled_in_words * gj + t["b_reads"])
+        out_bus = t["c_traffic"] if out_spilled else 0.0
+        acc = wl.m * wl.n
+        sram_reads = float((gk - 1) * acc)
+        sram_writes = float(gk * acc)
+        word_bytes = wl.in_bytes
+    else:
+        raise TypeError(f"unknown workload {type(wl).__name__}")
+    total = in_bus + out_bus
+    return TrafficReport(interconnect_words=total, input_words=in_bus,
+                         output_words=out_bus, sram_reads=sram_reads,
+                         sram_writes=sram_writes, bytes=total * word_bytes)
+
+
+def network_report(graph: NetworkGraph, schedules: dict[str, Schedule],
+                   resident=frozenset()) -> TrafficReport:
+    """Analytical network totals for (schedules, residency assignment) — the
+    quantity ``core.amc.run_network`` meters word-for-word. With an empty
+    resident set this is exactly the sum of the per-layer reports."""
+    resident = frozenset(resident)
+    totals = np.zeros(6, dtype=np.float64)
+    for node in graph.workload_nodes:
+        spilled = sum(graph.tensors[t].words for t in node.ins
+                      if t not in resident)
+        rep = _node_bus_report(node.workload, schedules[node.name], spilled,
+                               out_spilled=node.out not in resident)
+        totals += np.asarray([rep.interconnect_words, rep.input_words,
+                              rep.output_words, rep.sram_reads,
+                              rep.sram_writes, rep.bytes])
+    return TrafficReport(*totals)
+
+
+# ------------------------------------------------------------------ results
+@dataclasses.dataclass(frozen=True)
+class NodePlan:
+    """One planned graph node (virtual ops carry no schedule/traffic)."""
+
+    name: str
+    op: str
+    workload: "ConvWorkload | MatmulWorkload | None"
+    schedule: Schedule | None
+    traffic: TrafficReport | None       # residency-adjusted bus traffic
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgePlan:
+    """One feature-map edge with its planned traffic and residency."""
+
+    tensor: str
+    words: int
+    nbytes: int
+    producer: str
+    consumers: tuple[str, ...]
+    resident: bool
+    read_words: float      # consumer-side interconnect words (0 if resident)
+    write_words: float     # producer-side output interconnect words
+    saved_words: float     # words kept off the bus vs spilling this edge
+
+
+@dataclasses.dataclass(frozen=True)
+class NetPlan:
+    """A fully planned network graph: schedules, residency, and totals.
+
+    ``baseline`` is the independent-layer answer (``plan.plan_many``, i.e.
+    today's ``plan_network`` numbers) pinned as the ``no_fusion`` reference;
+    ``traffic`` is the fused-residency network total.
+    """
+
+    graph: NetworkGraph
+    budget: int | None
+    strategy: str
+    controller: Controller
+    residency_bytes: int
+    beam_width: int
+    nodes: tuple[NodePlan, ...]
+    edges: tuple[EdgePlan, ...]
+    traffic: TrafficReport
+    baseline: tuple[_api.Plan, ...]
+    peak_resident_bytes: int
+
+    @property
+    def schedules(self) -> dict[str, Schedule]:
+        return {n.name: n.schedule for n in self.nodes
+                if n.schedule is not None}
+
+    @property
+    def resident_tensors(self) -> frozenset[str]:
+        return frozenset(e.tensor for e in self.edges if e.resident)
+
+    @property
+    def total_words(self) -> float:
+        return self.traffic.interconnect_words
+
+    @property
+    def baseline_words(self) -> float:
+        """The ``no_fusion`` network total: today's per-layer sum."""
+        return sum(p.traffic.interconnect_words for p in self.baseline)
+
+    @property
+    def saving_pct(self) -> float:
+        if self.baseline_words == 0:
+            return 0.0
+        return 100.0 * (1.0 - self.total_words / self.baseline_words)
+
+    def report(self) -> str:
+        lines = [f"# netplan: {self.graph.name} strategy={self.strategy} "
+                 f"controller={self.controller.value} "
+                 f"residency={self.residency_bytes / 2**20:.1f}MiB",
+                 f"{'edge':<34}{'words':>10}{'KiB':>8}{'resident':>9}"
+                 f"{'bus words':>12}{'saved':>12}"]
+        for e in self.edges:
+            lines.append(f"{e.tensor:<34}{e.words:>10}{e.nbytes / 1024:>8.0f}"
+                         f"{'yes' if e.resident else 'no':>9}"
+                         f"{e.read_words + e.write_words:>12.3e}"
+                         f"{e.saved_words:>12.3e}")
+        lines.append(
+            f"{'TOTAL':<34}{'':>27}{self.total_words:>12.3e}"
+            f"{self.baseline_words - self.total_words:>12.3e}")
+        lines.append(f"no_fusion={self.baseline_words:.3e} words   "
+                     f"fused={self.total_words:.3e} words   "
+                     f"saving={self.saving_pct:.1f}%   "
+                     f"peak_resident={self.peak_resident_bytes / 2**20:.2f}MiB")
+        return "\n".join(lines)
+
+
+# -------------------------------------------------------------- beam search
+@dataclasses.dataclass(frozen=True)
+class _State:
+    cost: float
+    bytes_live: int
+    peak_bytes: int
+    live: frozenset          # resident tensors currently occupying the buffer
+    resident: frozenset      # every tensor ever held resident
+    choices: tuple           # chosen candidate index per workload node
+
+
+def _coerce_graph(graph_or_name) -> NetworkGraph:
+    if isinstance(graph_or_name, NetworkGraph):
+        return graph_or_name
+    if isinstance(graph_or_name, str):
+        return NetworkGraph.from_cnn(graph_or_name)
+    return NetworkGraph.from_layers(graph_or_name)
+
+
+def plan_graph(graph_or_name, budget: int | None = None,
+               strategy: "Strategy | str" = Strategy.EXACT_OPT,
+               controller: "Controller | str" = Controller.PASSIVE,
+               residency_bytes: int = DEFAULT_RESIDENCY_BYTES,
+               beam_width: int = DEFAULT_BEAM_WIDTH) -> NetPlan:
+    """Plan a whole network graph: joint per-node schedules + fused edges.
+
+    Accepts a `NetworkGraph`, a zoo CNN name, or an iterable of ConvLayers.
+    ``residency_bytes=0`` disables fusion (the result equals the
+    independent-layer baseline exactly). Tensors entering or leaving the
+    network are never held resident — external data must cross the bus.
+    """
+    graph = _coerce_graph(graph_or_name)
+    strategy = _api.coerce_strategy(strategy)
+    controller = Controller.coerce(controller)
+
+    # Pinned no_fusion baseline: literally the per-layer pipeline's answer.
+    baseline = tuple(_api.plan_many(list(graph.workloads), budget, strategy,
+                                    controller, exact_iters=True))
+    if residency_bytes <= 0:
+        # Nothing can be held resident: the baseline schedules ARE the
+        # answer — skip the candidate grids and the beam entirely.
+        chosen = {n.name: p.schedule
+                  for n, p in zip(graph.workload_nodes, baseline)}
+        return _assemble(graph, budget, strategy, controller, residency_bytes,
+                         beam_width, chosen, frozenset(), baseline, 0)
+
+    grids: dict[int, _NodeGrid] = {}
+    for i, node in enumerate(graph.nodes):
+        if node.workload is not None:
+            in_words = sum(graph.tensors[t].words for t in node.ins)
+            grids[i] = _node_grid(node, budget, strategy, controller, in_words)
+
+    # External data must cross the bus: network inputs and outputs are never
+    # resident. When spilling a tensor would still charge nothing — virtual
+    # producer (no eq-3 term) and no workload consumer (no eq-2 reads) — the
+    # obligation to ship the network's result moves to the producer's inputs,
+    # transitively through chains of virtual ops (e.g. the final ResNet
+    # add, a route/add chain). A spilled tensor with a workload consumer
+    # already crosses the bus via that consumer's reads, so the walk stops.
+    non_residable = set(graph.inputs) | set(graph.outputs)
+    frontier = list(graph.outputs)
+    while frontier:
+        t = frontier.pop()
+        prod = graph.nodes[graph.producer[t]]
+        if prod.workload is not None or prod.op == "input":
+            continue
+        if any(graph.nodes[c].workload is not None
+               for c in graph.consumers[t]):
+            continue
+        for s in prod.ins:
+            if s not in non_residable:
+                non_residable.add(s)
+                frontier.append(s)
+    last_use = {t: rng[1] for t, rng in graph.live_ranges().items()}
+
+    states = [_State(cost=0.0, bytes_live=0, peak_bytes=0,
+                     live=frozenset(), resident=frozenset(), choices=())]
+    for i, node in enumerate(graph.nodes):
+        grid = grids.get(i)
+        nxt: list[_State] = []
+        for st in states:
+            if grid is not None:
+                spilled = sum(graph.tensors[t].words for t in node.ins
+                              if t not in st.live)
+                idx_s, cost_s = grid.best(spilled, out_spilled=True)
+                idx_r, cost_r = grid.best(spilled, out_spilled=False)
+            else:
+                idx_s = idx_r = None
+                cost_s = cost_r = 0.0
+            # The node's output is allocated while its inputs are still
+            # held, then tensors whose last consumer is this node die.
+            out_bytes = graph.tensors[node.out].nbytes
+            dead = frozenset(t for t in st.live if last_use[t] <= i)
+            live_after = st.live - dead
+            bytes_after = st.bytes_live - sum(graph.tensors[t].nbytes
+                                              for t in dead)
+            choice = (st.choices + (idx_s,)) if grid is not None else st.choices
+            nxt.append(dataclasses.replace(
+                st, cost=st.cost + cost_s, live=live_after,
+                bytes_live=bytes_after, choices=choice))
+            if (node.out not in non_residable and residency_bytes > 0
+                    and st.bytes_live + out_bytes <= residency_bytes):
+                choice = ((st.choices + (idx_r,)) if grid is not None
+                          else st.choices)
+                nxt.append(_State(
+                    cost=st.cost + cost_r,
+                    bytes_live=bytes_after + out_bytes,
+                    peak_bytes=max(st.peak_bytes, st.bytes_live + out_bytes),
+                    live=live_after | {node.out},
+                    resident=st.resident | {node.out},
+                    choices=choice))
+        # Dedup on the live resident set (the only state the future sees),
+        # keep the cheapest, then prune to the beam.
+        best_by_key: dict[frozenset, _State] = {}
+        for st in nxt:
+            cur = best_by_key.get(st.live)
+            if cur is None or st.cost < cur.cost:
+                best_by_key[st.live] = st
+        states = sorted(best_by_key.values(), key=lambda s: s.cost)[:beam_width]
+
+    best = states[0]
+
+    if not best.resident:
+        # Bit-for-bit guard: with nothing resident the beam's argmin choices
+        # are the per-layer ones; reuse the baseline schedules outright.
+        chosen = {n.name: p.schedule
+                  for n, p in zip(graph.workload_nodes, baseline)}
+    else:
+        chosen = {}
+        wl_idx = 0
+        for i, node in enumerate(graph.nodes):
+            if i in grids:
+                chosen[node.name] = grids[i].cands.schedule_at(
+                    best.choices[wl_idx], controller)
+                wl_idx += 1
+    return _assemble(graph, budget, strategy, controller, residency_bytes,
+                     beam_width, chosen, best.resident, baseline,
+                     best.peak_bytes)
+
+
+def _assemble(graph: NetworkGraph, budget, strategy, controller: Controller,
+              residency_bytes: int, beam_width: int,
+              chosen: dict[str, Schedule], resident: frozenset,
+              baseline: tuple, peak_bytes: int) -> NetPlan:
+    """Materialize a `NetPlan` from chosen schedules + residency set."""
+    node_plans = []
+    for node in graph.nodes:
+        if node.workload is None:
+            node_plans.append(NodePlan(name=node.name, op=node.op,
+                                       workload=None, schedule=None,
+                                       traffic=None))
+            continue
+        spilled = sum(graph.tensors[t].words for t in node.ins
+                      if t not in resident)
+        rep = _node_bus_report(node.workload, chosen[node.name], spilled,
+                               out_spilled=node.out not in resident)
+        node_plans.append(NodePlan(name=node.name, op=node.op,
+                                   workload=node.workload,
+                                   schedule=chosen[node.name], traffic=rep))
+
+    def _read_iters(consumer: Node) -> int:
+        wl, sched = consumer.workload, chosen[consumer.name]
+        if isinstance(wl, ConvWorkload):
+            ng = wl.cout // wl.groups
+            return math.ceil(ng / min(sched.n, ng))
+        return math.ceil(wl.n / sched.bn)
+
+    edges = []
+    for tname, prod_step, cons_steps in graph.edge_list():
+        tensor = graph.tensors[tname]
+        prod = graph.nodes[prod_step]
+        cons = tuple(graph.nodes[c] for c in cons_steps)
+        is_res = tname in resident
+        reads = float(sum(tensor.words * _read_iters(c) for c in cons
+                          if c.workload is not None))
+        if prod.workload is not None:
+            prod_plan = next(n for n in node_plans if n.name == prod.name)
+            write = _node_bus_report(prod.workload, prod_plan.schedule,
+                                     0, out_spilled=True).output_words
+        else:
+            write = 0.0
+        edges.append(EdgePlan(
+            tensor=tname, words=tensor.words, nbytes=tensor.nbytes,
+            producer=prod.name, consumers=tuple(c.name for c in cons),
+            resident=is_res,
+            read_words=0.0 if is_res else reads,
+            write_words=0.0 if is_res else write,
+            saved_words=(reads + write) if is_res else 0.0))
+
+    traffic = network_report(graph, chosen, resident)
+    return NetPlan(graph=graph, budget=budget,
+                   strategy=(strategy.value if isinstance(strategy, Strategy)
+                             else str(strategy)),
+                   controller=controller, residency_bytes=int(residency_bytes),
+                   beam_width=beam_width, nodes=tuple(node_plans),
+                   edges=tuple(edges), traffic=traffic, baseline=baseline,
+                   peak_resident_bytes=peak_bytes)

@@ -1,0 +1,158 @@
+"""The network-graph IR must carry exactly the zoo's flat layers (same order,
+same fields) while preserving the real branch structure — residual adds,
+fire/inception concats, pool branches — and validate its own wiring."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.cnn_zoo import PAPER_CNNS, get_cnn, get_cnn_graph_spec
+from repro.plan.graph import NetworkGraph, Node, Tensor
+from repro.plan.workload import ConvWorkload
+
+
+@pytest.mark.parametrize("net", PAPER_CNNS + ("mobilenetv1",))
+def test_graph_matches_flat_layers(net):
+    g = NetworkGraph.from_cnn(net)
+    flat = get_cnn(net)
+    assert [w.to_layer() for w in g.workloads] == flat
+    # every conv's input tensors carry exactly the channels it reads
+    for node in g.workload_nodes:
+        in_words = sum(g.tensors[t].words for t in node.ins)
+        assert in_words == node.workload.in_acts
+
+
+def test_graph_spec_layer_identity():
+    for net in PAPER_CNNS:
+        assert tuple(get_cnn(net)) == get_cnn_graph_spec(net).layers
+
+
+def test_resnet18_residual_structure():
+    g = NetworkGraph.from_cnn("resnet18")
+    adds = [n for n in g.nodes if n.op == "add"]
+    assert len(adds) == 8                      # one per basic block
+    # an identity shortcut: the block input feeds both the first conv of the
+    # block and the add — i.e. it has (at least) two consumers
+    multi = [t for t in g.tensors
+             if len(g.consumers[t]) >= 2 and g.nodes[g.producer[t]].op != "input"]
+    assert multi, "no multi-consumer (shortcut) tensors found"
+    for a in adds:
+        ca, cb = (g.tensors[t].channels for t in a.ins)
+        assert ca == cb == g.tensors[a.out].channels
+
+
+def test_squeezenet_fire_concat():
+    g = NetworkGraph.from_cnn("squeezenet")
+    # fire: squeeze convs consume the 2-tensor concat of the expand branches
+    two_in = [n for n in g.workload_nodes if len(n.ins) == 2]
+    assert len(two_in) >= 7
+    for n in two_in:
+        assert sum(g.tensors[t].channels for t in n.ins) == n.workload.cin
+
+
+def test_googlenet_inception_concat_and_pool_branch():
+    g = NetworkGraph.from_cnn("googlenet")
+    four_in = [n for n in g.workload_nodes if len(n.ins) == 4]
+    assert four_in, "inception consumers should read 4 branch tensors"
+    pools = [n for n in g.nodes if n.op == "pool"]
+    # 4 stage pools on the trunk (1 pools a 4-branch bundle = 4 nodes, etc.)
+    # + one same-size pool per inception block feeding the 1x1 branch
+    assert len(pools) > 9
+
+
+def test_from_layers_linear_chain():
+    # consecutive shape-compatible layers share an edge (vgg16 block 1)...
+    g = NetworkGraph.from_layers(get_cnn("vgg16")[:2])
+    assert len(g.workload_nodes) == 2
+    assert len(g.inputs) == 1
+    # ...while unmodelled pools between convs start a new external segment
+    ga = NetworkGraph.from_layers(get_cnn("alexnet"))
+    assert len(ga.inputs) == 3
+
+
+def test_from_layers_shape_break_adds_input():
+    layers = [get_cnn("alexnet")[0], get_cnn("vgg16")[5]]
+    g = NetworkGraph.from_layers(layers)
+    assert len(g.inputs) == 2                  # no fake wiring across a break
+
+
+def test_from_layers_empty():
+    g = NetworkGraph.from_layers([])
+    assert g.workloads == ()
+    assert g.name == "custom"
+
+
+def test_validate_rejects_nontopological():
+    t = {"a": Tensor("a", 4, 8, 8), "b": Tensor("b", 4, 8, 8)}
+    with pytest.raises(ValueError, match="before production"):
+        NetworkGraph("bad", (Node("n1", "add", ("b",), "a"),
+                             Node("n2", "input", (), "b")), t)
+
+
+def test_validate_rejects_channel_mismatch():
+    wl = ConvWorkload(name="c", cin=8, cout=4, k=1, wi=8, hi=8, wo=8, ho=8)
+    t = {"x": Tensor("x", 4, 8, 8), "y": Tensor("y", 4, 8, 8)}
+    with pytest.raises(ValueError, match="carry"):
+        NetworkGraph("bad", (Node("i", "input", (), "x"),
+                             Node("c", "conv", ("x",), "y", wl)), t)
+
+
+def test_live_ranges_and_outputs():
+    g = NetworkGraph.from_cnn("resnet18")
+    ranges = g.live_ranges()
+    for tname, (born, last) in ranges.items():
+        assert born <= last
+        assert g.producer[tname] == born
+    assert len(g.outputs) == 1
+
+
+@pytest.mark.parametrize("net", ["resnet18", "squeezenet", "mobilenet"])
+def test_shrink_preserves_structure(net):
+    g = NetworkGraph.from_cnn(net)
+    s = g.shrink(spatial=8, channel_div=8)
+    assert len(s.nodes) == len(g.nodes)
+    assert [n.op for n in s.nodes] == [n.op for n in g.nodes]
+    for node in s.workload_nodes:
+        wl = node.workload
+        assert wl.wi == wl.wo == 8 and wl.stride == 1
+        if wl.groups > 1:                      # depthwise stays depthwise
+            assert wl.groups == wl.cin
+
+
+def test_from_transformer_chain():
+    from repro.configs.registry import get_config
+    g = NetworkGraph.from_transformer(get_config("gemma-2b"), seq_len=1024)
+    names = [n.op for n in g.nodes]
+    assert names.count("matmul") == 5          # qkv, out, up, down, lm_head
+    assert names.count("add") == 2             # two residual joins
+    assert g.outputs == ("logits",)
+    # dtype-aware edge bytes: bf16 activations
+    assert all(t.word_bytes == 2 for t in g.tensors.values())
+    # the residual add reads the block input: embed has two consumers
+    assert len(g.consumers["embed"]) == 2
+
+
+def test_tensor_bytes():
+    t = Tensor("t", 64, 7, 7, word_bytes=4)
+    assert t.words == 64 * 49
+    assert t.nbytes == 4 * 64 * 49
+
+
+def test_duplicate_producer_rejected():
+    t = {"a": Tensor("a", 1, 1, 1)}
+    with pytest.raises(ValueError, match="produced twice"):
+        NetworkGraph("bad", (Node("i", "input", (), "a"),
+                             Node("j", "input", (), "a")), t)
+
+
+def test_shrink_rejects_matmul_graphs():
+    from repro.configs.registry import get_config
+    g = NetworkGraph.from_transformer(get_config("gemma-2b"), seq_len=128)
+    with pytest.raises(TypeError, match="conv graphs"):
+        g.shrink()
+
+
+def test_graph_word_bytes_threads_through():
+    g = NetworkGraph.from_cnn("alexnet", word_bytes=2)
+    assert all(t.word_bytes == 2 for t in g.tensors.values())
+    assert all(dataclasses.asdict(w)["word_bytes"] == 2 for w in g.workloads)
