@@ -158,6 +158,50 @@ def netplan_savings(smoke: bool = False) -> list[str]:
     return rows
 
 
+def sim_bandwidth(smoke: bool = False) -> list[str]:
+    """Cycle-approximate simulation (`repro.sim`): latency, average/peak
+    interconnect bandwidth, and energy per zoo CNN under both controllers
+    (exact_opt partitions at P = 2048), plus the active-controller saving
+    and the paper's headline comparison — optimal partitioning + active
+    controller vs. the equal-partition passive baseline (up to ~40%+).
+    derived = ms / GB/s / M words / uJ / percent per the row name. The rows
+    are committed as ``BENCH_sim.json`` (``run.py sim --json``)."""
+    from repro.plan import netplan
+
+    nets = ("alexnet", "squeezenet", "resnet18") if smoke else PAPER_CNNS
+    rows = []
+    for net in nets:
+        reps = {}
+        for ctrl in ("passive", "active"):
+            (rep, us) = _timed(lambda: netplan.plan_graph(
+                net, 2048, "exact_opt", ctrl, residency_bytes=0).simulate())
+            reps[ctrl] = rep
+            rows.append(f"sim/{net}/{ctrl}/latency_ms,{us:.0f}"
+                        f",{rep.latency_s * 1e3:.3f}")
+            rows.append(f"sim/{net}/{ctrl}/avg_bw_gbs,0"
+                        f",{rep.avg_bw_bytes_s / 1e9:.2f}")
+            rows.append(f"sim/{net}/{ctrl}/peak_bw_gbs,0"
+                        f",{rep.peak_bw_bytes_s / 1e9:.2f}")
+            rows.append(f"sim/{net}/{ctrl}/bus_mwords,0"
+                        f",{rep.interconnect_words / 1e6:.2f}")
+            rows.append(f"sim/{net}/{ctrl}/energy_uj,0"
+                        f",{rep.energy_pj / 1e6:.2f}")
+        pas, act = reps["passive"], reps["active"]
+        rows.append(f"sim/{net}/active_words_saving_pct,0,"
+                    f"{100 * (1 - act.interconnect_words / pas.interconnect_words):.1f}")
+        rows.append(f"sim/{net}/active_latency_saving_pct,0,"
+                    f"{100 * (1 - act.latency_s / pas.latency_s):.1f}")
+        # The paper's headline: optimal partitioning AND the active
+        # controller vs. an unoptimized (equal-partition) passive design.
+        (base, us) = _timed(lambda: netplan.plan_graph(
+            net, 2048, "equal", "passive", residency_bytes=0).simulate())
+        rows.append(f"sim/{net}/combined_words_saving_pct,{us:.0f},"
+                    f"{100 * (1 - act.interconnect_words / base.interconnect_words):.1f}")
+        rows.append(f"sim/{net}/combined_latency_saving_pct,0,"
+                    f"{100 * (1 - act.latency_s / base.latency_s):.1f}")
+    return rows
+
+
 def dse_pareto() -> list[str]:
     """Budget-vs-traffic Pareto frontier (exact search, active controller):
     the MAC budgets that actually buy bandwidth, per CNN."""

@@ -14,6 +14,10 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
   pareto  — MAC-budget-vs-traffic Pareto frontier per CNN
   netplan — network-graph planning: no_fusion vs fused-residency totals
             per zoo CNN (with --json, also written to BENCH_netplan.json)
+  sim     — cycle-approximate simulation (repro.sim): latency + peak/avg
+            bandwidth per zoo CNN, passive vs active controller, and the
+            paper's combined ~40% headline (with --json, also written to
+            BENCH_sim.json)
   kernels — VMEM-level active/passive traffic + interpret timings
 
 Usage: python benchmarks/run.py [section] [--json] [--smoke]
@@ -63,6 +67,7 @@ def main(argv: list[str] | None = None) -> None:
         "pareto": paper_tables.dse_pareto,
         "netplan": functools.partial(paper_tables.netplan_savings,
                                      smoke=smoke),
+        "sim": functools.partial(paper_tables.sim_bandwidth, smoke=smoke),
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }
@@ -70,22 +75,23 @@ def main(argv: list[str] | None = None) -> None:
         raise SystemExit(f"unknown section {only!r}; known: {sorted(sections)}")
 
     rows: list[str] = []
-    netplan_rows: list[str] = []
+    # Sections whose rows are additionally tracked as BENCH_* artifacts.
+    artifacts = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json"}
+    artifact_rows: dict[str, list[str]] = {}
     for name, fn in sections.items():
         if only and name != only:
             continue
         out = fn()
-        if name == "netplan":
-            netplan_rows = out
+        if name in artifacts:
+            artifact_rows[name] = out
         rows.extend(out)
 
     if as_json:
         json.dump([parse_row(r) for r in rows], sys.stdout, indent=1)
         print()
-        if netplan_rows:
-            # The network-graph perf trajectory is tracked as an artifact.
-            with open("BENCH_netplan.json", "w") as fh:
-                json.dump([parse_row(r) for r in netplan_rows], fh, indent=1)
+        for name, out in artifact_rows.items():
+            with open(artifacts[name], "w") as fh:
+                json.dump([parse_row(r) for r in out], fh, indent=1)
                 fh.write("\n")
     else:
         print("name,us_per_call,derived")

@@ -44,25 +44,55 @@ class TrafficMeter:
         return dataclasses.asdict(self)
 
 
-class MemoryController:
-    """SRAM + controller with optional active (in-controller add) support."""
+@dataclasses.dataclass(frozen=True)
+class AccessEvent:
+    """One metered access burst — the event stream the loop nest implicitly
+    generates, exposed so second-order consumers (``repro.sim``, traces) can
+    replay or cross-check it. The per-field counts sum to the `TrafficMeter`
+    totals exactly."""
 
-    def __init__(self, shape: tuple[int, ...], active: bool):
+    op: str                   # "fetch" | "read" | "write" | "add" | "act"
+    target: str               # "input" | "acc"
+    words: int
+    interconnect_words: int
+    sram_reads: int
+    sram_writes: int
+
+
+class MemoryController:
+    """SRAM + controller with optional active (in-controller add) support.
+
+    Pass ``trace=[]`` to additionally record every access burst as an
+    `AccessEvent` (the stream ``repro.sim`` models epoch-by-epoch)."""
+
+    def __init__(self, shape: tuple[int, ...], active: bool,
+                 trace: "list[AccessEvent] | None" = None):
         self.sram = np.zeros(shape, np.float32)
         self.active = active
         self.meter = TrafficMeter()
+        self.trace = trace
+
+    def _record(self, op: str, words: int, bus: int, reads: int,
+                writes: int) -> None:
+        if self.trace is not None:
+            self.trace.append(AccessEvent(op=op, target="acc", words=words,
+                                          interconnect_words=bus,
+                                          sram_reads=reads,
+                                          sram_writes=writes))
 
     # -- passive interface ---------------------------------------------------
     def read(self, idx) -> np.ndarray:
         vals = self.sram[idx]
         self.meter.sram_reads += vals.size
         self.meter.interconnect_words += vals.size
+        self._record("read", vals.size, vals.size, vals.size, 0)
         return vals
 
     def write(self, idx, vals: np.ndarray) -> None:
         self.sram[idx] = vals
         self.meter.sram_writes += vals.size
         self.meter.interconnect_words += vals.size
+        self._record("write", vals.size, vals.size, 0, vals.size)
 
     # -- accumulate: routed through the controller when active ----------------
     def accumulate(self, idx, vals: np.ndarray, first: bool, last: bool = False,
@@ -78,6 +108,7 @@ class MemoryController:
             self.sram[idx] = old + vals
             self.meter.sram_writes += vals.size
             self.meter.interconnect_words += vals.size   # only the new psums
+            self._record("add", vals.size, vals.size, vals.size, vals.size)
         else:
             old = self.read(idx)                    # read-back over the bus
             self.write(idx, old + vals)
@@ -88,6 +119,7 @@ class MemoryController:
                 self.sram[idx] = np.maximum(self.sram[idx], 0.0)
                 self.meter.sram_reads += vals.size
                 self.meter.sram_writes += vals.size
+                self._record("act", vals.size, 0, vals.size, vals.size)
             else:
                 old = self.read(idx)
                 self.write(idx, np.maximum(old, 0.0))
@@ -116,14 +148,17 @@ def _conv2d_block(x: np.ndarray, w: np.ndarray, stride: int, pad: int) -> np.nda
 def run_partitioned_conv(layer: ConvLayer, part: "Schedule | Partition",
                          x: np.ndarray, w: np.ndarray,
                          active: bool | None = None, pad: int | None = None,
-                         act: bool = False) -> tuple[np.ndarray, TrafficMeter]:
+                         act: bool = False,
+                         trace: "list[AccessEvent] | None" = None
+                         ) -> tuple[np.ndarray, TrafficMeter]:
     """Execute the paper's partitioned loop nest with an instrumented memory
     controller, returning (output, traffic). `x`: (cin, hi, wi) float32,
     `w`: (cout, cin, k, k). Input reads are also metered (input SRAM).
 
     `part` is a unified `repro.plan.Schedule` (whose controller selects
     active/passive behaviour) or a legacy `Partition` (then `active` must be
-    given). An explicit `active=` always wins."""
+    given). An explicit `active=` always wins. Pass ``trace=[]`` to record
+    the full access-event stream (input fetches + accumulator traffic)."""
     assert layer.groups == 1, "meter model is for dense convs"
     if isinstance(part, Schedule):
         if active is None:
@@ -133,7 +168,8 @@ def run_partitioned_conv(layer: ConvLayer, part: "Schedule | Partition",
         raise TypeError("active= is required when part is a bare Partition")
     pad = layer.k // 2 if pad is None else pad
     m, n = min(part.m, layer.cin), min(part.n, layer.cout)
-    out_ctrl = MemoryController((layer.cout, layer.ho, layer.wo), active)
+    out_ctrl = MemoryController((layer.cout, layer.ho, layer.wo), active,
+                                trace=trace)
     in_meter = TrafficMeter()
 
     n_in_blocks = math.ceil(layer.cin / m)
@@ -144,6 +180,11 @@ def run_partitioned_conv(layer: ConvLayer, part: "Schedule | Partition",
             xin = x[ci0:ci1]
             in_meter.interconnect_words += xin.size
             in_meter.sram_reads += xin.size
+            if trace is not None:
+                trace.append(AccessEvent(op="fetch", target="input",
+                                         words=xin.size,
+                                         interconnect_words=xin.size,
+                                         sram_reads=xin.size, sram_writes=0))
             psum = _conv2d_block(xin, w[co0:co1, ci0:ci1], layer.stride, pad)
             out_ctrl.accumulate(np.s_[co0:co1], psum, first=(bi == 0),
                                 last=(bi == n_in_blocks - 1), act=act)
@@ -151,6 +192,22 @@ def run_partitioned_conv(layer: ConvLayer, part: "Schedule | Partition",
         interconnect_words=in_meter.interconnect_words + out_ctrl.meter.interconnect_words,
         sram_reads=in_meter.sram_reads + out_ctrl.meter.sram_reads,
         sram_writes=out_ctrl.meter.sram_writes)
+
+
+def access_trace(layer: ConvLayer, part: "Schedule | Partition",
+                 active: bool | None = None,
+                 rng_seed: int = 0) -> list[AccessEvent]:
+    """The access-event stream the partitioned loop nest generates for a
+    schedule on random data — the executable ground truth for the epoch walk
+    ``repro.sim`` models. Event field sums equal the `TrafficMeter` (and
+    therefore the analytical `TrafficReport`) exactly."""
+    rng = np.random.default_rng(rng_seed)
+    x = rng.standard_normal((layer.cin, layer.hi, layer.wi)).astype(np.float32)
+    w = rng.standard_normal((layer.cout, layer.cin, layer.k,
+                             layer.k)).astype(np.float32)
+    trace: list[AccessEvent] = []
+    run_partitioned_conv(layer, part, x, w, active=active, trace=trace)
+    return trace
 
 
 def analytical_report(layer: ConvLayer, part: "Schedule | Partition",

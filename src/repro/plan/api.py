@@ -66,6 +66,8 @@ def coerce_strategy(value: "Strategy | str") -> "Strategy | str":
         return Strategy(value)
     except ValueError:
         from repro.plan.planners import PLANNERS
+        if value.startswith("sim_") and value not in PLANNERS:
+            import repro.sim  # noqa: F401  (registers the sim_* strategies)
         if value in PLANNERS:
             return value
         raise ValueError(

@@ -237,6 +237,14 @@ class NetPlan:
             return 0.0
         return 100.0 * (1.0 - self.total_words / self.baseline_words)
 
+    def simulate(self, params=None):
+        """Run this plan through the cycle-approximate simulator — returns a
+        ``repro.sim.SimReport`` whose word totals equal :meth:`traffic`
+        exactly, plus the time/bandwidth/energy picture the word counts
+        cannot express."""
+        from repro.sim import simulate_network
+        return simulate_network(self, params=params)
+
     def report(self) -> str:
         lines = [f"# netplan: {self.graph.name} strategy={self.strategy} "
                  f"controller={self.controller.value} "

@@ -34,16 +34,18 @@ from repro.plan import conv_model, gemm_model
 from repro.plan.schedule import Controller
 from repro.plan.space import Candidates
 from repro.plan.workload import ConvWorkload, MatmulWorkload, Workload
-from repro.roofline.constants import HBM_BW, PEAK_FLOPS_BF16
+from repro.roofline.constants import (ENERGY_PJ_INTERCONNECT_BYTE,
+                                      ENERGY_PJ_SRAM_BYTE, HBM_BW,
+                                      PEAK_FLOPS_BF16)
 
 ObjectiveFn = Callable[[Workload, Candidates, Controller], np.ndarray]
 Objective = Union[str, ObjectiveFn]
 
-# Relative energy weights, pJ/byte: moving a byte across the SoC interconnect
-# (or HBM) costs roughly an order of magnitude more than an SRAM access
-# (Horowitz, ISSCC'14 scale). Only the ratio matters for argmin.
-ENERGY_PJ_INTERCONNECT_BYTE = 2.0
-ENERGY_PJ_SRAM_BYTE = 0.25
+# The per-byte energy weights live in the one shared table
+# (``repro.roofline.constants``), consumed by this module and by the
+# cycle-approximate simulator (`repro.sim.energy`); the two paths are pinned
+# to identical base energies by ``tests/test_sim.py``. The names are
+# re-exported here for backwards compatibility.
 
 OBJECTIVES: dict[str, ObjectiveFn] = {}
 
@@ -61,6 +63,9 @@ def register_objective(name: str) -> Callable[[ObjectiveFn], ObjectiveFn]:
 def get_objective(objective: Objective) -> ObjectiveFn:
     if callable(objective):
         return objective
+    if isinstance(objective, str) and objective.startswith("sim_") \
+            and objective not in OBJECTIVES:
+        import repro.sim  # noqa: F401  (registers sim_latency / sim_energy)
     try:
         return OBJECTIVES[objective]
     except KeyError:

@@ -1,8 +1,24 @@
-"""TPU v5e hardware constants (the dry-run TARGET)."""
+"""TPU v5e hardware constants (the dry-run TARGET) and the shared per-access
+energy table every energy model in the repo consumes.
+
+The energy numbers are Horowitz-style (ISSCC'14 scale) relative weights:
+moving a byte across the SoC interconnect (or HBM) costs roughly an order of
+magnitude more than an SRAM access, and a DRAM access costs more still, with
+a large fixed cost per row activation. Only the ratios matter for argmin-style
+planning; both `repro.plan.objectives.energy_bytes` and the cycle-approximate
+simulator (`repro.sim`) price bytes from this one table so the two paths stay
+consistent by construction (pinned by ``tests/test_sim.py``).
+"""
 
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
 HBM_BW = 819e9                # bytes/s per chip
 ICI_BW = 50e9                 # bytes/s per link (formula: bytes / (chips*link))
+
+# --- shared energy table (pJ) -----------------------------------------------
+ENERGY_PJ_SRAM_BYTE = 0.25          # engine/controller SRAM access
+ENERGY_PJ_INTERCONNECT_BYTE = 2.0   # SoC interconnect / HBM transfer
+ENERGY_PJ_DRAM_BYTE = 4.0           # DRAM channel burst data movement
+ENERGY_PJ_DRAM_ROW_ACT = 1500.0     # one row activation (precharge+activate)
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,

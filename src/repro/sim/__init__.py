@@ -1,0 +1,49 @@
+"""`repro.sim` — a cycle-approximate memory-hierarchy & interconnect
+simulator that validates and extends the first-order model.
+
+The analytical pipeline (`repro.plan`) counts words moved per eqs 1-7; this
+package models what those words *cost* on the paper's SoC: a DRAM/HBM channel
+with burst-size and open-page (row-buffer) accounting, banked SRAMs with
+read/write ports, a double-buffered DMA prefetcher, and the passive vs.
+active memory controller as a port policy (Section III). Word totals are
+exact — cross-validated against `TrafficReport` / ``network_report`` and the
+instrumented ``core.amc`` meters — while timing, bandwidth, row-miss,
+bank-conflict, and energy numbers are the second-order signal the word count
+cannot express.
+
+    from repro import sim, plan
+
+    wl = plan.conv_workloads("resnet18")[5]
+    p = plan.plan(wl, 2048, "exact_opt", "active")
+    rep = sim.simulate(wl, p.schedule)
+    rep.latency_s, rep.peak_bw_bytes_s, rep.row_misses, rep.energy_pj
+
+    netp = plan.plan_graph("resnet18", 2048, "exact_opt", "active")
+    sim.simulate_network(netp).summary()
+
+Importing this package registers ``sim_latency`` / ``sim_energy`` as DSE
+objectives *and* strategies, so ``plan.plan(wl, strategy="sim_latency")`` and
+``dse.sweep(..., objective="sim_energy")`` rank candidates by simulated cost.
+"""
+
+from repro.sim import objectives  # noqa: F401  (registers sim_* strategies)
+from repro.sim.energy import (ENERGY_PJ_DRAM_BYTE, ENERGY_PJ_DRAM_ROW_ACT,
+                              ENERGY_PJ_INTERCONNECT_BYTE,
+                              ENERGY_PJ_SRAM_BYTE, energy_breakdown)
+from repro.sim.engine import simulate
+from repro.sim.network import simulate_network
+from repro.sim.objectives import (make_sim_objective, register_sim_strategies,
+                                  sim_energy, sim_latency)
+from repro.sim.params import (DEFAULT_PARAMS, DramParams, SimParams,
+                              SramParams)
+from repro.sim.report import Phase, SimReport, merge_reports
+
+__all__ = [
+    "simulate", "simulate_network",
+    "SimParams", "DramParams", "SramParams", "DEFAULT_PARAMS",
+    "SimReport", "Phase", "merge_reports",
+    "sim_latency", "sim_energy", "make_sim_objective",
+    "register_sim_strategies",
+    "energy_breakdown", "ENERGY_PJ_DRAM_BYTE", "ENERGY_PJ_DRAM_ROW_ACT",
+    "ENERGY_PJ_INTERCONNECT_BYTE", "ENERGY_PJ_SRAM_BYTE",
+]

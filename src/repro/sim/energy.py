@@ -1,0 +1,36 @@
+"""Energy accounting for the simulator, priced from the one shared table.
+
+The base terms (interconnect bytes, SRAM bytes) use exactly the constants
+``repro.plan.objectives.energy_bytes`` uses — the two paths are identical by
+construction whenever the word counts agree (pinned by ``tests/test_sim.py``).
+The simulator adds the second-order DRAM terms the first-order objective
+cannot see: per-byte burst movement and a fixed cost per row activation, so
+schedules that thrash the row buffer pay for it in ``sim_energy``.
+"""
+
+from __future__ import annotations
+
+from repro.roofline.constants import (ENERGY_PJ_DRAM_BYTE,
+                                      ENERGY_PJ_DRAM_ROW_ACT,
+                                      ENERGY_PJ_INTERCONNECT_BYTE,
+                                      ENERGY_PJ_SRAM_BYTE)
+
+__all__ = [
+    "ENERGY_PJ_DRAM_BYTE", "ENERGY_PJ_DRAM_ROW_ACT",
+    "ENERGY_PJ_INTERCONNECT_BYTE", "ENERGY_PJ_SRAM_BYTE",
+    "energy_breakdown",
+]
+
+
+def energy_breakdown(interconnect_bytes: float, sram_bytes: float,
+                     dram_bytes: float, row_activations: float
+                     ) -> dict[str, float]:
+    """Per-component energy (pJ). ``interconnect + sram`` is bit-for-bit the
+    first-order ``energy_bytes`` objective; the ``dram_*`` terms are the
+    simulator's second-order extension."""
+    return {
+        "interconnect": interconnect_bytes * ENERGY_PJ_INTERCONNECT_BYTE,
+        "sram": sram_bytes * ENERGY_PJ_SRAM_BYTE,
+        "dram_bytes": dram_bytes * ENERGY_PJ_DRAM_BYTE,
+        "dram_row_act": row_activations * ENERGY_PJ_DRAM_ROW_ACT,
+    }

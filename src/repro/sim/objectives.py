@@ -1,0 +1,89 @@
+"""`sim_latency` / `sim_energy`: simulated time and energy as first-class DSE
+objectives — and as ``plan(strategy=...)`` presets.
+
+The first-order objectives rank candidate schedules by *words moved*; these
+rank by what the cycle-approximate simulator says the words *cost*: latency
+folds in burst/row-buffer efficiency, DMA overlap, and bus/SRAM service
+rates, and energy adds the DRAM row-activation term the byte-count model
+cannot see. An objective call simulates every candidate in the grid (the
+epoch-class walk is O(1) per candidate, so a full conv exact space stays in
+the milliseconds).
+
+Importing ``repro.sim`` registers both objectives and the matching strategy
+presets; `repro.plan` also lazy-imports this package when it meets an
+unknown ``sim_*`` strategy/objective name, so
+
+    plan.plan(wl, strategy="sim_latency", controller="active")
+    dse.sweep("resnet18", 2048, strategies=("sim_latency",), ...)
+
+work without an explicit import.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.plan import dse
+from repro.plan.objectives import OBJECTIVES, register_objective
+from repro.plan.schedule import Controller
+from repro.plan.space import Candidates
+from repro.plan.workload import Workload
+from repro.sim.engine import simulate
+from repro.sim.params import DEFAULT_PARAMS, SimParams
+
+__all__ = ["sim_latency", "sim_energy", "make_sim_objective",
+           "register_sim_strategies"]
+
+
+def make_sim_objective(metric: str, params: SimParams | None = None):
+    """A vectorized objective closure over ``SimReport.<metric>`` — build
+    your own variant with custom hardware parameters and register it under
+    a new name."""
+    params = DEFAULT_PARAMS if params is None else params
+
+    def objective(wl: Workload, cands: Candidates,
+                  controller: Controller) -> np.ndarray:
+        out = np.empty(len(cands), dtype=np.float64)
+        for i in range(len(cands)):
+            rep = simulate(wl, cands.schedule_at(i, controller), params)
+            out[i] = getattr(rep, metric)
+        return out
+
+    objective.__name__ = f"sim_{metric}"
+    return objective
+
+
+def sim_latency(wl: Workload, cands: Candidates,
+                controller: Controller) -> np.ndarray:
+    """Simulated end-to-end seconds (default hardware parameters)."""
+    return make_sim_objective("latency_s")(wl, cands, controller)
+
+
+def sim_energy(wl: Workload, cands: Candidates,
+               controller: Controller) -> np.ndarray:
+    """Simulated pJ, including the DRAM row-activation term."""
+    return make_sim_objective("energy_pj")(wl, cands, controller)
+
+
+def register_sim_strategies() -> None:
+    """Idempotently register the objectives and their strategy presets (the
+    sim analogues of ``exact_opt``: same candidate spaces and feasibility
+    constraints, simulated cost instead of word count)."""
+    if "sim_latency" in OBJECTIVES:
+        return
+    register_objective("sim_latency")(sim_latency)
+    register_objective("sim_energy")(sim_energy)
+    for name in ("sim_latency", "sim_energy"):
+        dse.register_strategy(
+            name,
+            conv=dse.StrategySpec(
+                space=dse.ConvExactSpace(),
+                constraints=(dse.MacBudget(), dse.GroupDivisible()),
+                objective=name),
+            matmul=dse.StrategySpec(
+                space=dse.AlignedBlockSpace(),
+                constraints=(dse.VmemBudget(),),
+                objective=name))
+
+
+register_sim_strategies()

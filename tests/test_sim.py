@@ -1,0 +1,277 @@
+"""`repro.sim`, the cycle-approximate simulator: its word totals must equal
+the analytical model bit-for-bit (per-layer `TrafficReport`, whole-network
+``network_report``, and the instrumented ``core.amc`` meters), the active
+controller must never move more simulated interconnect words than the
+passive one, both energy paths must price bytes from the one shared table,
+and ``sim_latency`` / ``sim_energy`` must be usable as first-class plan
+strategies and sweep objectives."""
+
+import dataclasses
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_stub import given, settings, st
+
+import numpy as np
+
+from repro import plan, sim
+from repro.core import amc
+from repro.core.cnn_zoo import PAPER_CNNS
+from repro.plan import dse, netplan
+from repro.plan.objectives import OBJECTIVES, energy_bytes
+from repro.plan.schedule import Controller, Schedule
+from repro.plan.space import Candidates
+from repro.plan.workload import ConvWorkload, MatmulWorkload
+from repro.roofline import constants as rc
+
+CONTROLLERS = ("passive", "active")
+
+
+# ------------------------------------------------------- per-layer parity
+@pytest.mark.parametrize("controller", CONTROLLERS)
+@pytest.mark.parametrize("net", PAPER_CNNS)
+def test_layer_parity_words_match_traffic_report(net, controller):
+    """Simulated totals == analytical `TrafficReport`, layer by layer, on
+    every zoo CNN under both controllers."""
+    for p in plan.plan_many(net, 2048, "exact_opt", controller):
+        rep = sim.simulate(p.workload, p.schedule)
+        got = rep.as_traffic_report()
+        for field in ("interconnect_words", "input_words", "output_words",
+                      "sram_reads", "sram_writes", "bytes"):
+            assert getattr(got, field) == getattr(p.traffic, field), \
+                (net, p.workload.name, controller, field)
+
+
+@pytest.mark.parametrize("controller", CONTROLLERS)
+def test_gemm_parity_words_match_traffic_report(controller):
+    wl = MatmulWorkload(m=4096, n=11008, k=4096)
+    for strategy in ("exhaustive_vmem", "first_order"):
+        p = plan.plan(wl, strategy=strategy, controller=controller)
+        got = sim.simulate(wl, p.schedule).as_traffic_report()
+        for field in ("interconnect_words", "input_words", "output_words",
+                      "sram_reads", "sram_writes"):
+            assert getattr(got, field) == getattr(p.traffic, field), \
+                (strategy, controller, field)
+
+
+# ------------------------------------------------------- network parity
+@pytest.mark.parametrize("controller", CONTROLLERS)
+@pytest.mark.parametrize("net", PAPER_CNNS)
+def test_network_parity_fused_residency(net, controller):
+    """`simulate_network` == ``network_report`` word-for-word on the whole
+    zoo with fused residency in play (the acceptance contract; resnet18 and
+    squeezenet are the paper pair, the rest ride the same assertion)."""
+    netp = netplan.plan_graph(net, 2048, "exact_opt", controller)
+    rep = sim.simulate_network(netp)
+    got = rep.as_traffic_report()
+    for field in ("interconnect_words", "input_words", "output_words",
+                  "sram_reads", "sram_writes"):
+        assert getattr(got, field) == getattr(netp.traffic, field), \
+            (net, controller, field)
+    # the NetPlan convenience runs the same simulation
+    assert netp.simulate().interconnect_words == rep.interconnect_words
+
+
+@pytest.mark.parametrize("controller", CONTROLLERS)
+@pytest.mark.parametrize("net", ["resnet18", "squeezenet"])
+def test_network_parity_against_executed_meter(net, controller):
+    """Analytical == simulated == executed: `amc.validate_network` pins the
+    meter to ``network_report``; the simulator must agree with both on the
+    same shrunk graph + plan."""
+    netp, meter, report = amc.validate_network(net, controller=controller)
+    rep = sim.simulate_network(netp)
+    assert rep.interconnect_words == meter.interconnect_words
+    assert rep.sram_reads == meter.sram_reads
+    assert rep.sram_writes == meter.sram_writes
+
+
+def test_access_trace_sums_match_sim():
+    """The loop nest's exposed access-event stream sums to exactly what the
+    epoch walk accounts."""
+    wl = plan.conv_workloads("resnet18")[5]
+    layer = dataclasses.replace(wl.to_layer(), wi=8, hi=8, wo=8, ho=8,
+                                stride=1)
+    for controller in CONTROLLERS:
+        sched = plan.plan(ConvWorkload.from_layer(layer), 2048, "exact_opt",
+                          controller).schedule
+        trace = amc.access_trace(layer, sched)
+        rep = sim.simulate(ConvWorkload.from_layer(layer), sched)
+        assert sum(e.interconnect_words for e in trace) == rep.interconnect_words
+        assert sum(e.sram_reads for e in trace) == rep.sram_reads
+        assert sum(e.sram_writes for e in trace) == rep.sram_writes
+        fetches = [e for e in trace if e.op == "fetch"]
+        assert sum(e.words for e in fetches) == rep.dram_words
+
+
+# ------------------------------------------------ active <= passive property
+@settings(max_examples=40, deadline=None)
+@given(cin=st.integers(1, 96), cout=st.integers(1, 96),
+       k=st.sampled_from([1, 3, 5, 7]), hw=st.integers(2, 24),
+       m=st.integers(1, 96), n=st.integers(1, 96))
+def test_active_interconnect_never_exceeds_passive(cin, cout, k, hw, m, n):
+    """For ANY valid conv schedule the active controller's simulated
+    interconnect words are <= the passive controller's — the paper's
+    Section III claim, as a property over the schedule space."""
+    wl = ConvWorkload(name="prop", cin=cin, cout=cout, k=k, wi=hw, hi=hw,
+                      wo=hw, ho=hw)
+    active = sim.simulate(wl, Schedule(kind="conv", bm=m, bn=n,
+                                       controller=Controller.ACTIVE))
+    passive = sim.simulate(wl, Schedule(kind="conv", bm=m, bn=n,
+                                        controller=Controller.PASSIVE))
+    assert active.interconnect_words <= passive.interconnect_words
+    # identical local work: the controller moves words off the bus, it does
+    # not remove the accesses
+    assert active.sram_reads == passive.sram_reads
+    assert active.sram_writes == passive.sram_writes
+    # and the sim timing can only improve
+    assert active.cycles <= passive.cycles
+
+
+# ------------------------------------------------------------- shared energy
+def test_energy_constants_are_the_shared_table():
+    from repro.plan import objectives as plan_obj
+    assert plan_obj.ENERGY_PJ_INTERCONNECT_BYTE is rc.ENERGY_PJ_INTERCONNECT_BYTE
+    assert plan_obj.ENERGY_PJ_SRAM_BYTE is rc.ENERGY_PJ_SRAM_BYTE
+    assert sim.ENERGY_PJ_INTERCONNECT_BYTE is rc.ENERGY_PJ_INTERCONNECT_BYTE
+    assert sim.ENERGY_PJ_SRAM_BYTE is rc.ENERGY_PJ_SRAM_BYTE
+
+
+@pytest.mark.parametrize("controller", CONTROLLERS)
+def test_energy_two_paths_identical_base(controller):
+    """The simulator's interconnect+SRAM energy equals the first-order
+    ``energy_bytes`` objective exactly, for the same schedule — the two
+    paths consume one table and identical word counts."""
+    ctrl = Controller.coerce(controller)
+    for wl in plan.conv_workloads("squeezenet"):
+        sched = plan.plan(wl, 2048, "exact_opt", ctrl).schedule
+        rep = sim.simulate(wl, sched)
+        first_order = float(energy_bytes(
+            wl, Candidates.single("conv", sched.bm, sched.bn), ctrl)[0])
+        base = (rep.energy_breakdown["interconnect"]
+                + rep.energy_breakdown["sram"])
+        assert base == first_order, wl.name
+        # the DRAM terms are a strict extension on top
+        assert rep.energy_pj >= base
+
+
+# --------------------------------------------------------- second-order knobs
+def test_row_buffer_and_burst_accounting():
+    wl = plan.conv_workloads("alexnet")[1]
+    sched = plan.plan(wl, 2048, "exact_opt", "passive").schedule
+    base = sim.simulate(wl, sched)
+    # smaller pages => more row activations => more cycles and energy
+    small_rows = sim.SimParams(dram=sim.DramParams(row_bytes=256))
+    worse = sim.simulate(wl, sched, small_rows)
+    assert worse.row_misses > base.row_misses
+    assert worse.cycles >= base.cycles
+    assert worse.energy_pj > base.energy_pj
+    # words are a first-order quantity: identical under any DRAM geometry
+    assert worse.interconnect_words == base.interconnect_words
+    # hits + misses account for every burst the fetch stream issues
+    total_bursts = base.row_hits + base.row_misses
+    assert total_bursts >= math.ceil(
+        base.dram_bytes / base.params.dram.burst_bytes)
+    assert 0 <= base.row_misses <= total_bursts
+
+
+def test_bank_conflicts_counted_for_single_ported_sram():
+    wl = plan.conv_workloads("alexnet")[2]
+    sched = plan.plan(wl, 2048, "exact_opt", "active").schedule
+    dual = sim.simulate(wl, sched)
+    single = sim.simulate(
+        wl, sched, sim.SimParams(sram=sim.SramParams(ports_per_bank=1)))
+    assert dual.bank_conflicts == 0
+    # every read-modify-write pair serializes on its bank
+    in_iters = math.ceil(wl.cin / min(sched.m, wl.cin))
+    assert single.bank_conflicts == (in_iters - 1) * wl.out_acts
+
+
+def test_double_buffering_hides_fetch_time():
+    wl = plan.conv_workloads("vgg16")[3]
+    sched = plan.plan(wl, 2048, "exact_opt", "passive").schedule
+    overlapped = sim.simulate(wl, sched)
+    serial = sim.simulate(
+        wl, sched, sim.SimParams(dma_double_buffer=False))
+    assert overlapped.cycles < serial.cycles
+    assert any(p.name.endswith("/fill") for p in overlapped.phases)
+    assert not any(p.name.endswith("/fill") for p in serial.phases)
+
+
+def test_report_internal_consistency():
+    netp = netplan.plan_graph("resnet18", 2048, "exact_opt", "passive")
+    rep = sim.simulate_network(netp)
+    assert rep.cycles == sum(p.cycles for p in rep.phases)
+    assert rep.peak_bw_bytes_s >= rep.avg_bw_bytes_s
+    assert rep.latency_s > 0
+    # per-phase word shares partition the exact totals (float distribution)
+    assert sum(p.interconnect_words for p in rep.phases) == pytest.approx(
+        rep.interconnect_words, rel=1e-9)
+    assert sum(p.sram_reads for p in rep.phases) == pytest.approx(
+        rep.sram_reads, rel=1e-9)
+    assert rep.summary()   # renders
+
+
+# ------------------------------------------------------- DSE integration
+def test_sim_objectives_registered_and_usable():
+    assert "sim_latency" in OBJECTIVES and "sim_energy" in OBJECTIVES
+    wl = plan.conv_workloads("resnet18")[5]
+    p_lat = plan.plan(wl, 2048, "sim_latency", "active")
+    p_nrg = plan.plan(wl, 2048, "sim_energy", "active")
+    assert p_lat.schedule.macs(wl.k) <= 2048    # feasibility still enforced
+    assert p_nrg.schedule.macs(wl.k) <= 2048
+    # the chosen schedule is at least as fast as the word-count optimum
+    p_words = plan.plan(wl, 2048, "exact_opt", "active")
+    assert sim.simulate(wl, p_lat.schedule).latency_s <= \
+        sim.simulate(wl, p_words.schedule).latency_s
+
+
+def test_sim_objective_in_sweep_and_registration_idempotent():
+    rows = dse.sweep("alexnet", 2048, strategies=("sim_latency",),
+                     controllers=("active",), objective="sim_energy")
+    assert rows and rows[0]["cost"] > 0
+    sim.register_sim_strategies()    # second call is a no-op, not an error
+    assert "sim_latency" in OBJECTIVES
+
+
+def test_make_sim_objective_custom_params():
+    slow_dram = sim.SimParams(dram=sim.DramParams(t_row_miss=400,
+                                                  row_bytes=256))
+    obj = sim.make_sim_objective("latency_s", slow_dram)
+    wl = plan.conv_workloads("alexnet")[1]
+    cands = Candidates.single("conv", 16, 14)
+    fast = OBJECTIVES["sim_latency"](wl, cands, Controller.PASSIVE)
+    slow = obj(wl, cands, Controller.PASSIVE)
+    assert slow[0] > fast[0]
+
+
+def test_sim_latency_matmul_strategy():
+    wl = MatmulWorkload(m=2048, n=2048, k=2048)
+    p = plan.plan(wl, strategy="sim_latency", controller="active")
+    assert p.schedule.kind == "matmul"
+    assert p.schedule.vmem_bytes(workload=wl) <= p.budget
+
+
+# ----------------------------------------------------------------- guards
+def test_simulate_rejects_mismatched_kinds_and_bad_spill():
+    conv = plan.conv_workloads("alexnet")[0]
+    gemm = MatmulWorkload(m=64, n=64, k=64)
+    conv_sched = Schedule(kind="conv", bm=3, bn=8)
+    gemm_sched = Schedule(kind="matmul", bm=128, bn=128, bk=128)
+    with pytest.raises(ValueError):
+        sim.simulate(conv, gemm_sched)
+    with pytest.raises(ValueError):
+        sim.simulate(gemm, conv_sched)
+    with pytest.raises(ValueError):
+        sim.simulate(conv, conv_sched, spilled_in_words=conv.in_acts + 1)
+
+
+def test_simulate_network_needs_schedules_for_bare_graph():
+    from repro.plan.graph import NetworkGraph
+    g = NetworkGraph.from_cnn("alexnet")
+    with pytest.raises(TypeError):
+        sim.simulate_network(g)
