@@ -199,6 +199,74 @@ def sim_bandwidth(smoke: bool = False) -> list[str]:
                     f"{100 * (1 - act.interconnect_words / base.interconnect_words):.1f}")
         rows.append(f"sim/{net}/combined_latency_saving_pct,0,"
                     f"{100 * (1 - act.latency_s / base.latency_s):.1f}")
+    rows.extend(sim_speedup())
+    return rows
+
+
+def sim_speedup(repeats: int = 3) -> list[str]:
+    """Grid-rate sim-objective speedup: the frozen per-candidate
+    ``simulate()`` loop (``sim.scalar_sim_objective``) vs the batched
+    evaluator (``sim.sim_latency`` over ``simulate_batch``), evaluating
+    ``sim_latency`` over the full `ConvExactSpace` of every ResNet-18 layer
+    at P = 2048. The batched costs are asserted exactly equal to the scalar
+    loop's before timing is reported. derived = candidate count for the
+    scalar/batch rows, speedup factor for the ``sim_speedup`` row (committed
+    as the ``dse/sim_speedup/...`` rows of ``BENCH_sim.json``)."""
+    import numpy as np
+
+    from repro import sim
+
+    wls = plan.conv_workloads("resnet18")
+    grids = [(w, dse.ConvExactSpace()(w, 2048)) for w in wls]
+    scalar = sim.scalar_sim_objective("latency_s")
+    ctrl = Controller.ACTIVE
+
+    def run_scalar():
+        return [scalar(w, g, ctrl) for w, g in grids]
+
+    def run_batch():
+        return [np.asarray(sim.sim_latency(w, g, ctrl)) for w, g in grids]
+
+    for (w, _), a, b in zip(grids, run_scalar(), run_batch()):
+        assert np.array_equal(a, b), \
+            f"batched sim objective diverged from scalar on {w.name}"
+    t_scalar = min(_timed(run_scalar)[1] for _ in range(repeats))
+    t_batch = min(_timed(run_batch)[1] for _ in range(repeats))
+    n_cand = sum(len(g) for _, g in grids)
+    return [
+        f"dse/sim_scalar/resnet18/P2048,{t_scalar:.0f},{n_cand}",
+        f"dse/sim_batch/resnet18/P2048,{t_batch:.0f},{n_cand}",
+        f"dse/sim_speedup/resnet18/P2048,{t_batch:.0f},"
+        f"{t_scalar / t_batch:.1f}",
+    ]
+
+
+def simplan_latency(smoke: bool = False) -> list[str]:
+    """Sim-objective network planning: ``plan_graph(..., objective=
+    "sim_latency")`` on every zoo CNN (all 8 in smoke mode too — the beam
+    scores with grid-rate batched evaluations, so the full set stays cheap).
+    ``no_fusion_ms`` simulates the per-layer sim-optimal baseline plans;
+    ``fused_ms`` the jointly planned fused-residency schedule. derived = ms /
+    percent / a count per the row name; committed as ``BENCH_simplan.json``
+    (``run.py simplan --json``)."""
+    del smoke  # the full zoo is the smoke set: planning is grid-rate
+    from repro import sim
+    from repro.plan import netplan
+
+    rows = []
+    for net in PAPER_CNNS:
+        (p, us) = _timed(lambda: netplan.plan_graph(
+            net, 2048, "exact_opt", "active", objective="sim_latency"))
+        fused = p.simulate()
+        base = sum(sim.simulate(pl.workload, pl.schedule).latency_s
+                   for pl in p.baseline)
+        rows.append(f"simplan/{net}/no_fusion_ms,0,{base * 1e3:.3f}")
+        rows.append(f"simplan/{net}/fused_ms,{us:.0f}"
+                    f",{fused.latency_s * 1e3:.3f}")
+        rows.append(f"simplan/{net}/latency_saving_pct,0"
+                    f",{100 * (1 - fused.latency_s / base):.1f}")
+        rows.append(f"simplan/{net}/resident_edges,0"
+                    f",{sum(1 for e in p.edges if e.resident)}")
     return rows
 
 

@@ -15,15 +15,27 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
   netplan — network-graph planning: no_fusion vs fused-residency totals
             per zoo CNN (with --json, also written to BENCH_netplan.json)
   sim     — cycle-approximate simulation (repro.sim): latency + peak/avg
-            bandwidth per zoo CNN, passive vs active controller, and the
-            paper's combined ~40% headline (with --json, also written to
-            BENCH_sim.json)
+            bandwidth per zoo CNN, passive vs active controller, the paper's
+            combined ~40% headline, and the grid-rate sim-objective speedup
+            (dse/sim_* rows; with --json, also written to BENCH_sim.json)
+  simplan — sim-objective network planning: plan_graph(..., objective=
+            "sim_latency") on every zoo CNN, fused vs no-fusion simulated
+            latency (with --json, also written to BENCH_simplan.json)
   kernels — VMEM-level active/passive traffic + interpret timings
 
 Usage: python benchmarks/run.py [section] [--json] [--smoke]
+       python benchmarks/run.py check [--smoke] [--tol=0.2]
 
 ``--smoke`` runs sections that support it on a reduced network set (CI keeps
 the graph/netplan code paths executing without the full 8-CNN sweep).
+
+``check`` is the benchmark-regression guard: it re-runs every section that
+has a committed ``BENCH_*.json`` artifact and fails (exit 1) if any row's
+``derived`` metric drifts from the committed value. Word counts and every
+simulated/model-derived metric are deterministic and must match exactly; the
+wall-clock ``speedup`` rows are machine-dependent and only checked against a
+floor (fresh >= ``--tol`` x committed, default 20%). Rows absent from the
+re-run (e.g. the full-zoo rows under ``--smoke``) are skipped.
 """
 
 from __future__ import annotations
@@ -48,12 +60,70 @@ def parse_row(row: str) -> dict:
     return {"name": name, "us_per_call": float(us), "derived": float(derived)}
 
 
+# Sections whose rows are additionally tracked as committed BENCH_* artifacts
+# (and re-validated by the ``check`` regression guard).
+ARTIFACTS = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json",
+             "simplan": "BENCH_simplan.json"}
+
+# ``check`` tolerance classes. Every ``derived`` value in the committed
+# artifacts is a deterministic model output (word counts, simulated
+# latencies/bandwidths/energies, savings percentages, candidate counts) and
+# must reproduce *exactly* — any drift is a model regression. The one
+# exception is the measured ``speedup`` rows, whose value is a wall-clock
+# ratio: those are machine-dependent, so they are checked only against a
+# floor (the fresh speedup must retain at least ``tol`` of the committed
+# one) — enough to catch a vectorization regression (~50x collapsing to ~1x)
+# without turning CI hardware variance into failures.
+DEFAULT_CHECK_TOL = 0.20
+
+
+def _metric_class(name: str) -> str:
+    return "speedup" if "speedup" in name else "exact"
+
+
+def check_benchmarks(sections: dict, tol: float = DEFAULT_CHECK_TOL) -> int:
+    """Re-run every section with a committed artifact and compare ``derived``
+    values row by row. Returns the number of failures (0 = pass)."""
+    failures: list[str] = []
+    compared = 0
+    for name, path in ARTIFACTS.items():
+        full = os.path.join(_ROOT, path)
+        if not os.path.exists(full) or name not in sections:
+            continue
+        with open(full) as fh:
+            committed = {r["name"]: r for r in json.load(fh)}
+        fresh = {r["name"]: r for r in map(parse_row, sections[name]())}
+        for rname, old in sorted(committed.items()):
+            new = fresh.get(rname)
+            if new is None:          # full-zoo row absent from a smoke re-run
+                continue
+            compared += 1
+            cls = _metric_class(rname)
+            if cls == "exact":
+                ok = new["derived"] == old["derived"]
+            else:
+                ok = new["derived"] >= old["derived"] * tol
+            if not ok:
+                failures.append(
+                    f"{path}: {rname} [{cls}] committed {old['derived']} "
+                    f"!= fresh {new['derived']}")
+    for f in failures:
+        print(f"CHECK FAIL {f}")
+    print(f"check: {compared} rows compared against committed artifacts, "
+          f"{len(failures)} failed (exact except speedup floor {tol:.0%})")
+    return len(failures)
+
+
 def main(argv: list[str] | None = None) -> None:
     from benchmarks import kernel_traffic, paper_tables
 
     argv = sys.argv[1:] if argv is None else argv
     as_json = "--json" in argv
     smoke = "--smoke" in argv
+    tol = DEFAULT_CHECK_TOL
+    for a in argv:
+        if a.startswith("--tol="):
+            tol = float(a.split("=", 1)[1])
     pos = [a for a in argv if not a.startswith("-")]
     only = pos[0] if pos else None
 
@@ -68,15 +138,19 @@ def main(argv: list[str] | None = None) -> None:
         "netplan": functools.partial(paper_tables.netplan_savings,
                                      smoke=smoke),
         "sim": functools.partial(paper_tables.sim_bandwidth, smoke=smoke),
+        "simplan": functools.partial(paper_tables.simplan_latency,
+                                     smoke=smoke),
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }
+    if only == "check":
+        raise SystemExit(check_benchmarks(sections, tol) and 1)
     if only is not None and only not in sections:
-        raise SystemExit(f"unknown section {only!r}; known: {sorted(sections)}")
+        raise SystemExit(f"unknown section {only!r}; known: "
+                         f"{sorted(sections) + ['check']}")
 
     rows: list[str] = []
-    # Sections whose rows are additionally tracked as BENCH_* artifacts.
-    artifacts = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json"}
+    artifacts = ARTIFACTS
     artifact_rows: dict[str, list[str]] = {}
     for name, fn in sections.items():
         if only and name != only:

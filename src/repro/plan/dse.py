@@ -237,12 +237,19 @@ def _workload_kind(workload: Workload) -> str:
 def plan_with_strategy(workload: Workload, budget: int,
                        strategy: "Strategy | str",
                        controller: "Controller | str",
-                       max_block: int = 4096) -> Schedule:
+                       max_block: int = 4096, *,
+                       objective: "Objective | None" = None) -> Schedule:
     """Resolve a strategy to its preset and run the search — the single
-    implementation every planner in ``repro.plan.planners`` delegates to."""
+    implementation every planner in ``repro.plan.planners`` delegates to.
+
+    ``objective`` overrides the preset's scoring function while keeping its
+    candidate space and feasibility constraints (how ``plan_graph`` re-scores
+    a word-count strategy's space under a simulated-cost objective).
+    """
     spec = strategy_spec(strategy, _workload_kind(workload), max_block)
     return search(workload, budget, space=spec.space,
-                  constraints=spec.constraints, objective=spec.objective,
+                  constraints=spec.constraints,
+                  objective=spec.objective if objective is None else objective,
                   controller=controller).schedule
 
 

@@ -76,9 +76,10 @@ class _NodeGrid:
         return i, float(cost[i])
 
 
-def _node_grid(node: Node, budget: int | None, strategy, controller: Controller,
-               in_words: int) -> _NodeGrid:
-    wl = node.workload
+def _node_candidates(wl, budget: int | None, strategy, controller: Controller):
+    """(cands, mask, kind): the strategy preset's feasible candidate grid for
+    one workload node, with the space's fallback applied when nothing is
+    feasible — shared by the word-count and the simulated-cost node grids."""
     budget = _api.default_budget(wl) if budget is None else int(budget)
     kind = "conv" if isinstance(wl, ConvWorkload) else "matmul"
     spec = dse.strategy_spec(strategy, kind)
@@ -92,6 +93,13 @@ def _node_grid(node: Node, budget: int | None, strategy, controller: Controller,
             raise ValueError(f"no feasible candidate for {wl!r} at {budget}")
         cands = fallback(wl, budget)
         mask = np.ones(len(cands), dtype=bool)
+    return cands, mask, kind
+
+
+def _node_grid(node: Node, budget: int | None, strategy, controller: Controller,
+               in_words: int) -> _NodeGrid:
+    wl = node.workload
+    cands, mask, kind = _node_candidates(wl, budget, strategy, controller)
     if kind == "conv":
         ng = wl.cout // wl.groups
         read_iters = -(-ng // np.minimum(cands.bn, ng))
@@ -107,6 +115,71 @@ def _node_grid(node: Node, budget: int | None, strategy, controller: Controller,
         out_traffic = t["c_traffic"]
     return _NodeGrid(cands=cands, mask=mask, read_iters=read_iters,
                      fixed=fixed, out_traffic=out_traffic, in_words=in_words)
+
+
+@dataclasses.dataclass(eq=False)
+class _SimNodeGrid:
+    """Simulated-cost analogue of `_NodeGrid`: the node's cost over the
+    candidate grid is a batched ``simulate_batch`` evaluation under the beam
+    state's residency (``spilled_in_words`` / ``out_spilled``), cached per
+    residency key — beam states that agree on a node's resident inputs share
+    one grid evaluation."""
+
+    wl: "ConvWorkload | MatmulWorkload"
+    cands: dse.Candidates
+    mask: np.ndarray
+    controller: Controller
+    objective: object                  # repro.sim.objectives.SimObjective
+    _cache: dict = dataclasses.field(default_factory=dict)
+
+    def best(self, spilled_in_words: int, out_spilled: bool
+             ) -> tuple[int, float]:
+        key = (spilled_in_words, out_spilled)
+        hit = self._cache.get(key)
+        if hit is None:
+            res = self.objective.batch(self.wl, self.cands, self.controller,
+                                       spilled_in_words=spilled_in_words,
+                                       out_spilled=out_spilled)
+            cost = np.asarray(res.metric(self.objective.metric),
+                              dtype=np.float64)
+            i = int(np.argmin(np.where(self.mask, cost, np.inf)))
+            hit = (i, float(cost[i]))
+            self._cache[key] = hit
+        return hit
+
+
+def _resolve_sim_objective(strategy, objective):
+    """A `repro.sim.objectives.SimObjective` when the netplan beam should
+    score with simulated cost, else None (word-count planning).
+
+    ``objective=None`` inherits the strategy's own scoring: a ``sim_*``
+    strategy preset plans its per-layer searches by simulated cost, so the
+    network beam must too. An explicit objective must be a sim objective
+    (``"sim_latency"`` / ``"sim_energy"`` / a ``make_sim_objective`` result)
+    or ``"interconnect_words"`` (the word-count default) — other word
+    objectives do not decompose over the residency states the beam explores.
+    """
+    name = strategy.value if isinstance(strategy, Strategy) else str(strategy)
+    if objective is None and not name.startswith("sim_"):
+        return None
+    if isinstance(objective, str) and objective == "interconnect_words":
+        return None
+    from repro.plan.objectives import get_objective
+    from repro.sim.objectives import SimObjective
+    if isinstance(objective, SimObjective):
+        return objective
+    try:
+        obj = get_objective(objective if objective is not None else name)
+    except KeyError:
+        obj = None
+    if isinstance(obj, SimObjective):
+        return obj
+    if objective is None:       # custom "sim_"-named, non-sim strategy
+        return None
+    raise ValueError(
+        f"plan_graph objective {objective!r} is not a sim objective; pass "
+        f"'sim_latency', 'sim_energy', a make_sim_objective(...) instance, "
+        f"or 'interconnect_words' (the word-count default)")
 
 
 # ------------------------------------------------------- analytical totals
@@ -277,6 +350,24 @@ class _State:
     choices: tuple           # chosen candidate index per workload node
 
 
+def _override_baseline(workloads, budget, strategy, controller: Controller,
+                       objective) -> tuple:
+    """Per-layer plans with the strategy's candidate spaces re-scored by an
+    overriding objective — the ``no_fusion`` reference when ``plan_graph``
+    plans under ``objective=...``. With the strategy's own objective this is
+    exactly ``plan_many``'s answer (same grids, same argmin)."""
+    from repro.plan.traffic import traffic_report
+    plans = []
+    for wl in workloads:
+        b = _api.default_budget(wl) if budget is None else int(budget)
+        sched = dse.plan_with_strategy(wl, b, strategy, controller,
+                                       objective=objective)
+        plans.append(_api.Plan(workload=wl, budget=b, schedule=sched,
+                               traffic=traffic_report(wl, sched,
+                                                      exact_iters=True)))
+    return tuple(plans)
+
+
 def _coerce_graph(graph_or_name) -> NetworkGraph:
     if isinstance(graph_or_name, NetworkGraph):
         return graph_or_name
@@ -289,21 +380,39 @@ def plan_graph(graph_or_name, budget: int | None = None,
                strategy: "Strategy | str" = Strategy.EXACT_OPT,
                controller: "Controller | str" = Controller.PASSIVE,
                residency_bytes: int = DEFAULT_RESIDENCY_BYTES,
-               beam_width: int = DEFAULT_BEAM_WIDTH) -> NetPlan:
+               beam_width: int = DEFAULT_BEAM_WIDTH, *,
+               objective=None) -> NetPlan:
     """Plan a whole network graph: joint per-node schedules + fused edges.
 
     Accepts a `NetworkGraph`, a zoo CNN name, or an iterable of ConvLayers.
     ``residency_bytes=0`` disables fusion (the result equals the
     independent-layer baseline exactly). Tensors entering or leaving the
     network are never held resident — external data must cross the bus.
+
+    ``objective`` selects what the beam minimizes. The default is the
+    strategy's own scoring — interconnect words for the word-count
+    strategies, simulated cost for the ``sim_*`` presets. Passing
+    ``"sim_latency"`` / ``"sim_energy"`` (or a ``sim.make_sim_objective``
+    instance) re-scores any strategy's candidate spaces by batched
+    per-node simulation: each beam state's residency is threaded into one
+    ``simulate_batch`` grid evaluation per node (cached per residency key),
+    and the ``no_fusion`` baseline becomes the per-layer sim-optimal plans —
+    identical to ``plan(wl, strategy="sim_latency")`` layer by layer.
     """
     graph = _coerce_graph(graph_or_name)
     strategy = _api.coerce_strategy(strategy)
     controller = Controller.coerce(controller)
+    sim_obj = _resolve_sim_objective(strategy, objective)
 
-    # Pinned no_fusion baseline: literally the per-layer pipeline's answer.
-    baseline = tuple(_api.plan_many(list(graph.workloads), budget, strategy,
-                                    controller, exact_iters=True))
+    # Pinned no_fusion baseline: literally the per-layer pipeline's answer
+    # (under an objective override, the per-layer search re-scored by it).
+    if sim_obj is None or objective is None:
+        baseline = tuple(_api.plan_many(list(graph.workloads), budget,
+                                        strategy, controller,
+                                        exact_iters=True))
+    else:
+        baseline = _override_baseline(graph.workloads, budget, strategy,
+                                      controller, sim_obj)
     if residency_bytes <= 0:
         # Nothing can be held resident: the baseline schedules ARE the
         # answer — skip the candidate grids and the beam entirely.
@@ -312,11 +421,19 @@ def plan_graph(graph_or_name, budget: int | None = None,
         return _assemble(graph, budget, strategy, controller, residency_bytes,
                          beam_width, chosen, frozenset(), baseline, 0)
 
-    grids: dict[int, _NodeGrid] = {}
+    grids: "dict[int, _NodeGrid | _SimNodeGrid]" = {}
     for i, node in enumerate(graph.nodes):
         if node.workload is not None:
-            in_words = sum(graph.tensors[t].words for t in node.ins)
-            grids[i] = _node_grid(node, budget, strategy, controller, in_words)
+            if sim_obj is not None:
+                cands, mask, _ = _node_candidates(node.workload, budget,
+                                                  strategy, controller)
+                grids[i] = _SimNodeGrid(wl=node.workload, cands=cands,
+                                        mask=mask, controller=controller,
+                                        objective=sim_obj)
+            else:
+                in_words = sum(graph.tensors[t].words for t in node.ins)
+                grids[i] = _node_grid(node, budget, strategy, controller,
+                                      in_words)
 
     # External data must cross the bus: network inputs and outputs are never
     # resident. When spilling a tensor would still charge nothing — virtual

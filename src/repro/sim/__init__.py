@@ -24,26 +24,36 @@ cannot express.
 Importing this package registers ``sim_latency`` / ``sim_energy`` as DSE
 objectives *and* strategies, so ``plan.plan(wl, strategy="sim_latency")`` and
 ``dse.sweep(..., objective="sim_energy")`` rank candidates by simulated cost.
+Both objectives run at grid rate through the batched evaluator
+(``sim.simulate_batch``): the whole candidate grid is costed in one
+closed-form array pass that matches scalar ``simulate()`` float-exactly, and
+``plan.plan_graph(..., objective="sim_latency")`` scores its beam states with
+the same batched per-node evaluations.
 """
 
 from repro.sim import objectives  # noqa: F401  (registers sim_* strategies)
+from repro.sim.batch import BatchSimResult, simulate_batch
 from repro.sim.energy import (ENERGY_PJ_DRAM_BYTE, ENERGY_PJ_DRAM_ROW_ACT,
                               ENERGY_PJ_INTERCONNECT_BYTE,
                               ENERGY_PJ_SRAM_BYTE, energy_breakdown)
 from repro.sim.engine import simulate
-from repro.sim.network import simulate_network
-from repro.sim.objectives import (make_sim_objective, register_sim_strategies,
-                                  sim_energy, sim_latency)
+from repro.sim.network import (clear_node_report_cache,
+                               node_report_cache_info, simulate_network)
+from repro.sim.objectives import (SimObjective, make_sim_objective,
+                                  register_sim_strategies,
+                                  scalar_sim_objective, sim_energy,
+                                  sim_latency)
 from repro.sim.params import (DEFAULT_PARAMS, DramParams, SimParams,
                               SramParams)
 from repro.sim.report import Phase, SimReport, merge_reports
 
 __all__ = [
-    "simulate", "simulate_network",
+    "simulate", "simulate_network", "simulate_batch", "BatchSimResult",
+    "node_report_cache_info", "clear_node_report_cache",
     "SimParams", "DramParams", "SramParams", "DEFAULT_PARAMS",
     "SimReport", "Phase", "merge_reports",
-    "sim_latency", "sim_energy", "make_sim_objective",
-    "register_sim_strategies",
+    "sim_latency", "sim_energy", "SimObjective", "make_sim_objective",
+    "scalar_sim_objective", "register_sim_strategies",
     "energy_breakdown", "ENERGY_PJ_DRAM_BYTE", "ENERGY_PJ_DRAM_ROW_ACT",
     "ENERGY_PJ_INTERCONNECT_BYTE", "ENERGY_PJ_SRAM_BYTE",
 ]

@@ -1,0 +1,469 @@
+"""Grid-rate simulation: the epoch-cost model over a whole candidate grid.
+
+``simulate()`` walks one (workload, schedule) pair and builds Python objects
+per epoch class (`_Epoch`, `Phase`, `SimReport`) — exact, but ~tens of
+microseconds per call, which multiplied by a full `ConvExactSpace` grid makes
+``sim_latency``/``sim_energy`` DSE objectives and the netplan beam search
+loop-rate, not grid-rate. This module re-expresses the same arithmetic as
+closed-form array code over a `Candidates` grid:
+
+  * every per-candidate quantity (cycles, energy, row hits/misses, bank
+    conflicts, exact word totals, peak/avg bandwidth) is one broadcast
+    expression — **zero per-candidate Python objects** in the hot path;
+  * the epoch classes of the scalar walk become a fixed, small *slot matrix*
+    (conv: 2 output-channel splits x {first, bulk-update, remainder-update};
+    GEMM: 2 x 2 x {only, first, mid, last} block splits) of shape
+    ``(slots, candidates)``, costed in one pass with inactive slots masked to
+    zero count;
+  * metric columns materialize lazily from the slot matrix, so an objective
+    that only reads ``latency_s`` never pays for the energy/row/peak columns;
+  * the arithmetic mirrors ``engine._epoch_phase`` / ``engine._dram_cycles``
+    operation for operation (same float64 divisions, same ceil points, exact
+    integer-valued accumulations), so every metric matches scalar
+    ``simulate()`` float-exactly — pinned by ``tests/test_sim_batch.py``
+    across random workloads, both controllers, and the residency
+    (``spilled_in_words`` / ``out_spilled``) variants.
+
+The expressions are plain ``numpy`` by default. Passing ``xp=jax.numpy``
+evaluates the same closed form under jax (jit-able; requires x64 enabled for
+float-exact parity) — the slot construction is static Python, so the whole
+evaluator traces to one fused array program.
+"""
+
+from __future__ import annotations
+
+from functools import cached_property
+
+import numpy as np
+
+from repro.plan.schedule import Controller
+from repro.plan.space import Candidates
+from repro.plan.workload import ConvWorkload, MatmulWorkload, Workload
+from repro.sim.energy import (ENERGY_PJ_DRAM_BYTE, ENERGY_PJ_DRAM_ROW_ACT,
+                              ENERGY_PJ_INTERCONNECT_BYTE, ENERGY_PJ_SRAM_BYTE)
+from repro.sim.params import DEFAULT_PARAMS, SimParams
+
+__all__ = ["BatchSimResult", "simulate_batch"]
+
+
+def _fetch_side(params: SimParams, fetch_bytes, xp):
+    """(fetch cycles, bursts, rows): `engine._dram_cycles` + the bus-in
+    bound, elementwise. ``fetch_bytes <= 0`` yields all zeros, exactly as the
+    scalar early-out does."""
+    d = params.dram
+    bursts = xp.ceil(fetch_bytes / d.burst_bytes)
+    rows = xp.ceil(fetch_bytes / d.row_bytes)
+    dram_c = bursts * d.t_burst + rows * d.t_row_miss
+    bus_in = xp.ceil(fetch_bytes / params.bus_bytes_per_cycle)
+    return xp.maximum(dram_c, bus_in), bursts, rows
+
+
+class BatchSimResult:
+    """Struct-of-arrays `SimReport`: one entry per candidate schedule.
+
+    Every metric is a parallel array over the `Candidates` grid the batch was
+    evaluated on; the scalar ``simulate()`` report for candidate ``i`` holds
+    exactly ``metric[i]``. Word totals are exact (the analytical model's
+    integer arithmetic); cycles and energy match the scalar walk to the last
+    bit because both sides perform the identical float64 operations.
+
+    Columns are materialized lazily from the internal ``(slots, candidates)``
+    epoch matrix and cached, so e.g. a latency objective evaluates only the
+    cycle chain while a later ``energy_pj`` read on the same result reuses
+    the already-computed row-activation counts.
+    """
+
+    def __init__(self, kind: str, controller: Controller, params: SimParams,
+                 xp, epochs: dict, totals_fn, fill_row: int):
+        self.kind = kind
+        self.controller = controller
+        self.params = params
+        self._xp = xp
+        self._e = epochs          # slot matrices: (slots, candidates)
+        self._totals_fn = totals_fn   # lazy exact per-candidate word totals
+        # The walk's first epoch lives in this slot row; its fetch time IS
+        # the `engine._fill_phase` cost (zero when it fetches nothing).
+        self._fill_row = fill_row
+
+    @cached_property
+    def _totals(self) -> dict:
+        return self._totals_fn()
+
+    def __len__(self) -> int:
+        return int(np.asarray(self._e["count"]).shape[-1])
+
+    # ------------------------------------------------- epoch-matrix pieces
+    @cached_property
+    def _fetch(self):
+        """(fetch cycles, bursts, rows) of the slot matrix's DMA side."""
+        return _fetch_side(self.params, self._e["fetch_bytes"], self._xp)
+
+    @cached_property
+    def _phase_cycles(self):
+        """`engine._epoch_phase` timing over the slot matrix: per-slot
+        ``per_epoch * count`` cycles (a zero-count slot is a phase the scalar
+        walk simply does not have)."""
+        xp, p, e = self._xp, self.params, self._e
+        fetch, _, _ = self._fetch
+        compute = xp.ceil(e["macs"] / p.macs_per_cycle)
+        bus_out = xp.ceil(e["bus_bytes"] / p.bus_bytes_per_cycle)
+        wpc = p.sram.words_per_cycle
+        sram = xp.ceil(e["acc_sram"] / wpc)
+        if e["engine_sram"] is not None:   # GEMM A/B reads are not metered
+            sram = xp.maximum(xp.ceil(e["engine_sram"] / wpc), sram)
+        proc = xp.maximum(xp.maximum(compute, sram), bus_out)
+        if p.dma_double_buffer:
+            per_epoch = xp.maximum(fetch, proc)
+        else:
+            per_epoch = fetch + proc
+        return per_epoch * e["count"]
+
+    # ------------------------------------------------------ time / bandwidth
+    @cached_property
+    def cycles(self):
+        cycles = self._phase_cycles.sum(axis=0)
+        if self.params.dma_double_buffer:
+            # `engine._fill_phase`: the un-overlapped first fetch of the
+            # double-buffered pipeline — time only, its words are already
+            # charged to the first epoch (whose fetch bound is exactly the
+            # fill cost, and is zero when the epoch fetches nothing).
+            fill, _, _ = self._fetch
+            cycles = cycles + fill[self._fill_row]
+        return cycles
+
+    @property
+    def latency_s(self):
+        return self.cycles * self.params.cycle_s
+
+    @cached_property
+    def peak_words_per_cycle(self):
+        """Max per-phase bus rate. The scalar report divides each phase's
+        word total by its cycle total, so mirror that exact quotient."""
+        xp, e = self._xp, self._e
+        phase_cycles = self._phase_cycles
+        phase_words = (e["fetch_words"] + e["bus_words"]) * e["count"]
+        safe = xp.where(phase_cycles > 0, phase_cycles, 1.0)
+        return xp.where(phase_cycles > 0, phase_words / safe, 0.0).max(axis=0)
+
+    @property
+    def peak_bw_bytes_s(self):
+        xp = self._xp
+        words = xp.where(self.interconnect_words > 0,
+                         self.interconnect_words, 1.0)
+        word_bytes = xp.where(self.interconnect_words > 0,
+                              self.interconnect_bytes / words, 0.0)
+        return (self.peak_words_per_cycle * word_bytes
+                * self.params.clock_ghz * 1e9)
+
+    @property
+    def avg_bw_bytes_s(self):
+        xp = self._xp
+        lat = xp.where(self.cycles > 0, self.latency_s, 1.0)
+        return xp.where(self.cycles > 0, self.interconnect_bytes / lat, 0.0)
+
+    # ------------------------------------------------- second-order counters
+    @cached_property
+    def row_hits(self):
+        _, bursts, rows = self._fetch
+        return ((bursts - rows) * self._e["count"]).sum(axis=0).astype(np.int64)
+
+    @cached_property
+    def row_misses(self):
+        _, _, rows = self._fetch
+        return (rows * self._e["count"]).sum(axis=0).astype(np.int64)
+
+    @cached_property
+    def bank_conflicts(self):
+        if self.params.sram.ports_per_bank >= 2:
+            return np.zeros(len(self), dtype=np.int64)
+        xp, e = self._xp, self._e
+        rmw = xp.where(e["first"], 0, e["acc_w"])   # update epochs RMW-pair
+        return (rmw * e["count"]).sum(axis=0).astype(np.int64)
+
+    @property
+    def row_miss_rate(self):
+        total = self.row_hits + self.row_misses
+        return np.where(total > 0,
+                        self.row_misses / np.where(total > 0, total, 1), 0.0)
+
+    # ------------------- first-order totals (exact; == the analytical model)
+    @cached_property
+    def input_words(self):
+        return self._xp.asarray(self._totals["input_words"], dtype=np.float64)
+
+    @cached_property
+    def output_words(self):
+        return self._xp.asarray(self._totals["output_words"],
+                                dtype=np.float64)
+
+    @cached_property
+    def interconnect_words(self):
+        return self.input_words + self.output_words
+
+    @cached_property
+    def sram_reads(self):
+        return self._xp.asarray(self._totals["sram_reads"], dtype=np.float64)
+
+    @cached_property
+    def sram_writes(self):
+        return self._xp.asarray(self._totals["sram_writes"], dtype=np.float64)
+
+    @cached_property
+    def interconnect_bytes(self):
+        return self._xp.asarray(self._totals["interconnect_bytes"],
+                                dtype=np.float64)
+
+    @cached_property
+    def dram_words(self):
+        return self._xp.asarray(self._totals["dram_words"], dtype=np.float64)
+
+    @cached_property
+    def dram_bytes(self):
+        return self._xp.asarray(self._totals["dram_bytes"], dtype=np.float64)
+
+    # ----------------------------------------------------------------- energy
+    @property
+    def energy_breakdown(self) -> dict:
+        """The four `sim.energy.energy_breakdown` components, as arrays."""
+        sram_bytes = self._xp.asarray(self._totals["sram_bytes"],
+                                      dtype=np.float64)
+        return {
+            "interconnect": self.interconnect_bytes
+            * ENERGY_PJ_INTERCONNECT_BYTE,
+            "sram": sram_bytes * ENERGY_PJ_SRAM_BYTE,
+            "dram_bytes": self.dram_bytes * ENERGY_PJ_DRAM_BYTE,
+            "dram_row_act": self.row_misses * ENERGY_PJ_DRAM_ROW_ACT,
+        }
+
+    @cached_property
+    def energy_pj(self):
+        # sum(dict.values()) order of `SimReport.energy_pj`: left-associated
+        # interconnect + sram + dram_bytes + dram_row_act.
+        b = self.energy_breakdown
+        return (b["interconnect"] + b["sram"] + b["dram_bytes"]
+                + b["dram_row_act"])
+
+    # ------------------------------------------------------------------ views
+    def metric(self, name: str):
+        """The per-candidate column for any `SimReport` metric name (e.g.
+        ``latency_s``, ``energy_pj``, ``interconnect_words``)."""
+        try:
+            col = getattr(self, name)
+        except AttributeError:
+            raise KeyError(f"unknown sim metric {name!r}") from None
+        if not hasattr(col, "ndim") or col.ndim != 1:
+            raise KeyError(f"{name!r} is not a per-candidate metric")
+        return col
+
+
+def _conv_slots(wl: ConvWorkload, cands: Candidates, active: bool,
+                spilled: int, out_spilled: bool, xp):
+    """Vectorized `engine._conv_epochs` + `engine._conv_totals`: the epoch
+    slot matrix, the exact totals, and the fill-phase fetch bytes."""
+    g = wl.groups
+    mg, ng = wl.cin // g, wl.cout // g
+    bm = np.asarray(cands.bm, dtype=np.int64)
+    bn = np.asarray(cands.bn, dtype=np.int64)
+    m_eff = xp.minimum(bm, mg)
+    n_eff = xp.minimum(bn, ng)
+    spill_frac = spilled / wl.in_acts if wl.in_acts else 0.0
+    wb = wl.word_bytes
+    hw_in, hw_out = wl.hi * wl.wi, wl.ho * wl.wo
+    k2hw = wl.k * wl.k * hw_out
+
+    cc0, c0 = ng // n_eff, n_eff
+    c1 = ng % n_eff                       # remainder output split (may be 0)
+    p1 = xp.where(c1 > 0, 1, 0)
+    mf, m_rem = mg // m_eff, mg % m_eff
+    bulk = xp.maximum(mf - 1, 0)
+    has_rem = xp.where(m_rem > 0, 1, 0)
+
+    # Slot matrix: {c0, c1} output splits x {first, bulk update, remainder
+    # update} input walks, in the scalar enumeration's order. The per-split
+    # walk shape is shared, so counts are (walk profile) x (split count).
+    walk = xp.stack([xp.ones_like(bulk), bulk, has_rem])
+    count = xp.concatenate([walk * (cc0 * g), walk * (p1 * g)])
+    s = xp.stack([m_eff, m_eff, m_rem, m_eff, m_eff, m_rem])
+    c = xp.stack([c0, c0, c0, c1, c1, c1])
+    first = np.asarray([True, False, False, True, False, False])[:, None]
+
+    in_w = s * hw_in
+    acc_w = c * hw_out
+    acc_w2 = 2 * acc_w
+    if not out_spilled:
+        psum = xp.zeros_like(acc_w)
+    elif active:
+        psum = acc_w
+    else:
+        psum = xp.where(first, acc_w, acc_w2)
+    fetch_w = in_w * spill_frac
+    epochs = dict(
+        count=count, macs=s * c * k2hw,
+        fetch_words=fetch_w, fetch_bytes=fetch_w * wb,
+        bus_words=psum, bus_bytes=psum * wb,
+        engine_sram=in_w,
+        acc_sram=xp.where(first, acc_w, acc_w2),
+        first=first, acc_w=acc_w)
+
+    # ---- exact totals: `engine._conv_totals`, elementwise (lazy: a pure
+    # time/energy objective never reads them) -------------------------------
+    def totals() -> dict:
+        out_iters = -(-ng // n_eff)
+        in_iters = -(-mg // m_eff)
+        writes = in_iters * wl.out_acts
+        in_bus = spilled * out_iters
+        if not out_spilled:
+            out_bus = xp.zeros_like(writes)
+        elif active:
+            out_bus = writes
+        else:
+            out_bus = 2 * writes - wl.out_acts
+        sram_reads = wl.in_acts * out_iters + (in_iters - 1) * wl.out_acts
+        return dict(
+            input_words=in_bus, output_words=out_bus,
+            sram_reads=sram_reads, sram_writes=writes, dram_words=in_bus,
+            interconnect_bytes=(in_bus + out_bus) * wb,
+            dram_bytes=in_bus * wb,
+            sram_bytes=(sram_reads + writes) * wb)
+
+    # epochs[0] is (c0, m_eff, first): the walk's first epoch, whose fetch
+    # bound is the fill-phase cost.
+    return epochs, totals, 0
+
+
+# Canonical GEMM reduction-walk slots: `engine._k_positions` as masks.
+_K_SLOTS = ("only", "first", "mid", "last")
+
+
+def _gemm_slots(wl: MatmulWorkload, cands: Candidates, active: bool,
+                spilled: int, out_spilled: bool, xp):
+    """Vectorized `engine._gemm_epochs` + `engine._gemm_totals`."""
+    bm = np.asarray(cands.bm, dtype=np.int64)
+    bn = np.asarray(cands.bn, dtype=np.int64)
+    bk = np.asarray(cands.bk, dtype=np.int64)
+    a_frac = spilled / (wl.m * wl.k) if wl.m * wl.k else 0.0
+
+    bm_eff = xp.minimum(bm, wl.m)
+    bn_eff = xp.minimum(bn, wl.n)
+    blk = xp.minimum(bk, wl.k)
+    gk_eff = -(-wl.k // blk)
+    k_rem = wl.k % blk
+
+    # (size, count) per axis split; the remainder split has count 0 when the
+    # axis divides evenly, exactly dropping the scalar walk's missing epoch.
+    one = xp.ones_like(blk)
+    m_splits = ((bm_eff, wl.m // bm_eff),
+                (wl.m % bm_eff, xp.where(wl.m % bm_eff > 0, 1, 0)))
+    n_splits = ((bn_eff, wl.n // bn_eff),
+                (wl.n % bn_eff, xp.where(wl.n % bn_eff > 0, 1, 0)))
+    k_sizes = {"only": wl.k * one, "first": blk, "mid": blk,
+               "last": xp.where(k_rem > 0, k_rem, blk)}
+    k_counts = {"only": xp.where(gk_eff == 1, 1, 0),
+                "first": xp.where(gk_eff > 1, 1, 0),
+                "mid": xp.maximum(gk_eff - 2, 0),
+                "last": xp.where(gk_eff > 1, 1, 0)}
+
+    # Slot matrix: 2 x 2 x 4 block splits in the scalar triple-loop order.
+    rows = [(si, sj, k_sizes[pos], ci * cj * k_counts[pos],
+             pos in ("first", "only"), pos in ("last", "only"))
+            for si, ci in m_splits for sj, cj in n_splits for pos in _K_SLOTS]
+    si = xp.stack([r[0] * one for r in rows])
+    sj = xp.stack([r[1] * one for r in rows])
+    sk = xp.stack([r[2] for r in rows])
+    count = xp.stack([r[3] for r in rows])
+    first = np.asarray([r[4] for r in rows])[:, None]
+    last = np.asarray([r[5] for r in rows])[:, None]
+
+    acc_w = si * sj
+    acc_w2 = 2 * acc_w
+    if not out_spilled:
+        c_bus = xp.zeros_like(acc_w)
+        c_bytes = c_bus
+    elif active:
+        c_bus = xp.where(last, acc_w, 0)
+        c_bytes = c_bus * wl.out_bytes
+    else:
+        c_bus = xp.where(first, acc_w, acc_w2)
+        c_bytes = c_bus * wl.acc_bytes
+    fetch_w = si * sk * a_frac + sk * sj
+    epochs = dict(
+        count=count, macs=si * sj * sk,
+        fetch_words=fetch_w, fetch_bytes=fetch_w * wl.in_bytes,
+        bus_words=c_bus, bus_bytes=c_bytes,
+        engine_sram=None,        # A/B block reads are not metered
+        acc_sram=xp.where(first, acc_w, acc_w2),
+        first=first, acc_w=acc_w)
+
+    # ---- exact totals: `engine._gemm_totals`, elementwise (lazy) -----------
+    def totals() -> dict:
+        gi = -(-wl.m // bm)
+        gj = -(-wl.n // bn)
+        gk = -(-wl.k // bk)
+        a_bus = spilled * gj
+        b_bus = gi * (wl.k * wl.n)
+        acc_words = wl.m * wl.n
+        if not out_spilled:
+            c_bus_t = xp.zeros_like(gk)
+            c_bytes_t = c_bus_t
+        elif active:
+            c_bus_t = acc_words * xp.ones_like(gk)
+            c_bytes_t = c_bus_t * wl.out_bytes
+        else:
+            c_bus_t = (2 * gk - 1) * acc_words
+            c_bytes_t = c_bus_t * wl.acc_bytes
+        return dict(
+            input_words=a_bus + b_bus, output_words=c_bus_t,
+            sram_reads=(gk - 1) * acc_words, sram_writes=gk * acc_words,
+            dram_words=a_bus + b_bus,
+            interconnect_bytes=(a_bus + b_bus) * wl.in_bytes + c_bytes_t,
+            dram_bytes=(a_bus + b_bus) * wl.in_bytes,
+            sram_bytes=((gk - 1) * acc_words + gk * acc_words)
+            * wl.acc_bytes)
+
+    # The walk's first epoch is the (first m-split, first n-split) block at
+    # the first reduction position; its fetch is sized min(bk, k) whether
+    # the walk has one k block or many, which is exactly the "first" slot
+    # (row 1) — when gk == 1 that row's bytes equal the "only" row's.
+    return epochs, totals, 1
+
+
+def simulate_batch(workload: Workload, cands: Candidates,
+                   controller: "Controller | str" = Controller.PASSIVE,
+                   params: SimParams | None = None, *,
+                   spilled_in_words: int | None = None,
+                   out_spilled: bool = True,
+                   xp=np) -> BatchSimResult:
+    """Simulate every candidate schedule of a grid in one array pass.
+
+    The batched analogue of ``engine.simulate``: ``cands`` supplies the block
+    sizes (`Candidates` struct-of-arrays), ``controller`` applies to the whole
+    grid, and ``spilled_in_words`` / ``out_spilled`` carry the residency
+    convention of `repro.plan.netplan` unchanged. Every returned column is
+    float-exactly the scalar report's value for that candidate.
+    """
+    params = DEFAULT_PARAMS if params is None else params
+    controller = Controller.coerce(controller)
+    active = controller is Controller.ACTIVE
+    if isinstance(workload, ConvWorkload):
+        if cands.kind != "conv":
+            raise ValueError(
+                f"conv workload needs conv candidates: {cands.kind}")
+        wl_in = workload.in_acts
+        builder = _conv_slots
+    elif isinstance(workload, MatmulWorkload):
+        if cands.kind != "matmul":
+            raise ValueError(
+                f"matmul workload needs matmul candidates: {cands.kind}")
+        wl_in = workload.m * workload.k
+        builder = _gemm_slots
+    else:
+        raise TypeError(f"unknown workload type {type(workload).__name__}")
+    spilled = wl_in if spilled_in_words is None else spilled_in_words
+    if not 0 <= spilled <= wl_in:
+        raise ValueError(f"spilled_in_words {spilled} outside [0, {wl_in}]")
+
+    epochs, totals_fn, fill_row = builder(workload, cands, active, spilled,
+                                          out_spilled, xp)
+    return BatchSimResult(kind=cands.kind, controller=controller,
+                          params=params, xp=xp, epochs=epochs,
+                          totals_fn=totals_fn, fill_row=fill_row)

@@ -70,7 +70,16 @@ def _dram_cycles(params: SimParams, nbytes: float) -> tuple[float, int, int]:
 
 
 def _epoch_phase(params: SimParams, ep: _Epoch, layer: str) -> Phase:
-    """Cost one epoch class and expand to a `Phase` (count * per-epoch)."""
+    """Cost one epoch class and expand to a `Phase` (count * per-epoch).
+
+    Bound classification is deterministic with a documented tie-break: a
+    degenerate epoch (``per_epoch == 0``, i.e. no work at all) is ``"idle"``;
+    otherwise, when the processing side is the bottleneck (``proc >= fetch``,
+    fetch winning ties because the overlap hides the equal fetch), the
+    tie-break precedence among the processing terms is
+    compute > sram > bus; on the fetch side a DRAM-channel time equal to the
+    bus-transfer time reads ``"dram"`` (the channel is the scarcer resource).
+    """
     dram_c, bursts, rows = _dram_cycles(params, ep.fetch_bytes)
     bus_in = math.ceil(ep.fetch_bytes / params.bus_bytes_per_cycle)
     fetch = max(dram_c, bus_in)
@@ -86,7 +95,9 @@ def _epoch_phase(params: SimParams, ep: _Epoch, layer: str) -> Phase:
     else:
         per_epoch = fetch + proc
 
-    if per_epoch == 0 or proc >= fetch:
+    if per_epoch == 0:
+        bound = "idle"
+    elif proc >= fetch:
         bound = ("compute" if proc == compute
                  else "sram" if proc == sram else "bus")
     else:

@@ -15,6 +15,8 @@ per-phase timelines chain in topological order.
 
 from __future__ import annotations
 
+import functools
+
 from repro.plan.graph import NetworkGraph
 from repro.plan.netplan import NetPlan
 from repro.plan.schedule import Controller, Schedule
@@ -22,7 +24,28 @@ from repro.sim.engine import simulate
 from repro.sim.params import DEFAULT_PARAMS, SimParams
 from repro.sim.report import SimReport, merge_reports
 
-__all__ = ["simulate_network"]
+__all__ = ["simulate_network", "node_report_cache_info",
+           "clear_node_report_cache"]
+
+
+# Per-node report cache: every argument is a frozen dataclass (or scalar), so
+# the key is exact, and `SimReport` is immutable, so sharing one instance
+# across callers is safe. Repeated network sweeps (benchmark `check` re-runs,
+# controller comparisons, netplan baselines) hit the same node reports
+# instead of re-walking the epoch classes.
+@functools.lru_cache(maxsize=4096)
+def _node_report(workload, schedule: Schedule, params: SimParams,
+                 spilled: int, out_spilled: bool, name: str) -> SimReport:
+    return simulate(workload, schedule, params, spilled_in_words=spilled,
+                    out_spilled=out_spilled, name=name)
+
+
+def node_report_cache_info():
+    return _node_report.cache_info()
+
+
+def clear_node_report_cache() -> None:
+    _node_report.cache_clear()
 
 
 def simulate_network(plan_or_graph: "NetPlan | NetworkGraph",
@@ -55,11 +78,9 @@ def simulate_network(plan_or_graph: "NetPlan | NetworkGraph",
         sched = schedules[node.name]
         spilled = sum(graph.tensors[t].words for t in node.ins
                       if t not in resident)
-        reports.append(simulate(
-            node.workload, sched, params,
-            spilled_in_words=spilled,
-            out_spilled=node.out not in resident,
-            name=node.name))
+        reports.append(_node_report(
+            node.workload, sched, params, spilled,
+            node.out not in resident, node.name))
     # Label like amc.run_network: active if any node runs active.
     controller = (Controller.ACTIVE
                   if any(r.controller is Controller.ACTIVE for r in reports)

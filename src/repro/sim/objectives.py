@@ -5,9 +5,16 @@ The first-order objectives rank candidate schedules by *words moved*; these
 rank by what the cycle-approximate simulator says the words *cost*: latency
 folds in burst/row-buffer efficiency, DMA overlap, and bus/SRAM service
 rates, and energy adds the DRAM row-activation term the byte-count model
-cannot see. An objective call simulates every candidate in the grid (the
-epoch-class walk is O(1) per candidate, so a full conv exact space stays in
-the milliseconds).
+cannot see. An objective call evaluates the whole grid through the batched
+evaluator (`repro.sim.batch`) — one closed-form array pass, no per-candidate
+Python objects — so a full conv exact space costs microseconds, not the
+milliseconds-per-layer of the old per-candidate ``simulate()`` loop
+(``scalar_sim_objective`` keeps that loop as the frozen parity oracle and
+benchmark baseline).
+
+``sim_latency`` and ``sim_energy`` are module-level `SimObjective` instances
+(hoisted once at import — repeated DSE sweeps share them instead of
+re-closing over the hardware parameters per call).
 
 Importing ``repro.sim`` registers both objectives and the matching strategy
 presets; `repro.plan` also lazy-imports this package when it meets an
@@ -28,17 +35,61 @@ from repro.plan.objectives import OBJECTIVES, register_objective
 from repro.plan.schedule import Controller
 from repro.plan.space import Candidates
 from repro.plan.workload import Workload
+from repro.sim.batch import BatchSimResult, simulate_batch
 from repro.sim.engine import simulate
 from repro.sim.params import DEFAULT_PARAMS, SimParams
 
-__all__ = ["sim_latency", "sim_energy", "make_sim_objective",
-           "register_sim_strategies"]
+__all__ = ["SimObjective", "sim_latency", "sim_energy", "make_sim_objective",
+           "scalar_sim_objective", "register_sim_strategies"]
 
 
-def make_sim_objective(metric: str, params: SimParams | None = None):
-    """A vectorized objective closure over ``SimReport.<metric>`` — build
-    your own variant with custom hardware parameters and register it under
-    a new name."""
+class SimObjective:
+    """A vectorized DSE objective over a simulated `SimReport` metric.
+
+    Callable with the standard objective signature
+    ``(workload, Candidates, controller) -> float64 cost array``; the whole
+    grid is evaluated in one `simulate_batch` pass. ``batch()`` exposes the
+    full `BatchSimResult` (with the netplan residency knobs) for consumers
+    that need more than the cost column, e.g. the sim-objective network
+    planner.
+    """
+
+    def __init__(self, metric: str, params: SimParams | None = None,
+                 name: str | None = None):
+        self.metric = metric
+        self.params = DEFAULT_PARAMS if params is None else params
+        self.__name__ = f"sim_{metric}" if name is None else name
+
+    def __repr__(self) -> str:
+        return f"SimObjective({self.metric!r})"
+
+    def batch(self, wl: Workload, cands: Candidates,
+              controller: "Controller | str", *,
+              spilled_in_words: int | None = None,
+              out_spilled: bool = True) -> BatchSimResult:
+        return simulate_batch(wl, cands, controller, self.params,
+                              spilled_in_words=spilled_in_words,
+                              out_spilled=out_spilled)
+
+    def __call__(self, wl: Workload, cands: Candidates,
+                 controller: Controller) -> np.ndarray:
+        return np.asarray(self.batch(wl, cands, controller)
+                          .metric(self.metric), dtype=np.float64)
+
+
+def make_sim_objective(metric: str,
+                       params: SimParams | None = None) -> SimObjective:
+    """A vectorized objective over ``SimReport.<metric>`` — build your own
+    variant with custom hardware parameters and register it under a new
+    name. (`sim_latency` / `sim_energy` are the two premade instances.)"""
+    return SimObjective(metric, params)
+
+
+def scalar_sim_objective(metric: str, params: SimParams | None = None):
+    """The pre-batch per-candidate ``simulate()`` loop, kept frozen as the
+    parity oracle for the batch evaluator's tests and as the baseline the
+    ``BENCH_sim.json`` ``dse/sim_speedup`` rows measure against. Do not
+    optimise."""
     params = DEFAULT_PARAMS if params is None else params
 
     def objective(wl: Workload, cands: Candidates,
@@ -49,20 +100,16 @@ def make_sim_objective(metric: str, params: SimParams | None = None):
             out[i] = getattr(rep, metric)
         return out
 
-    objective.__name__ = f"sim_{metric}"
+    objective.__name__ = f"sim_{metric}_scalar"
     return objective
 
 
-def sim_latency(wl: Workload, cands: Candidates,
-                controller: Controller) -> np.ndarray:
-    """Simulated end-to-end seconds (default hardware parameters)."""
-    return make_sim_objective("latency_s")(wl, cands, controller)
+#: Simulated end-to-end seconds (default hardware parameters). Named after
+#: its registered strategy/objective key, as the old function was.
+sim_latency = SimObjective("latency_s", name="sim_latency")
 
-
-def sim_energy(wl: Workload, cands: Candidates,
-               controller: Controller) -> np.ndarray:
-    """Simulated pJ, including the DRAM row-activation term."""
-    return make_sim_objective("energy_pj")(wl, cands, controller)
+#: Simulated pJ, including the DRAM row-activation term.
+sim_energy = SimObjective("energy_pj", name="sim_energy")
 
 
 def register_sim_strategies() -> None:

@@ -26,7 +26,11 @@ class Phase:
     name: str
     count: int                   # epochs aggregated into this phase
     cycles: float                # total cycles (count * per-epoch cycles)
-    bound: str                   # "compute" | "dram" | "bus" | "sram" | "dma"
+    # Bottleneck resource: "compute" | "dram" | "bus" | "sram" | "dma", or
+    # "idle" for a degenerate zero-work epoch. Ties break deterministically:
+    # processing beats fetch (overlap hides an equal fetch), and within the
+    # processing side compute > sram > bus; dram beats dma on the fetch side.
+    bound: str
     interconnect_words: float    # words crossing the bus in this phase
     dram_words: float            # words fetched from the DRAM channel
     sram_reads: float

@@ -1,0 +1,70 @@
+"""The ``benchmarks/run.py check`` regression guard: metric classification
+(word counts exact, wall-clock-derived within tolerance) and the compare loop
+itself, exercised against a stub artifact."""
+
+import json
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+@pytest.mark.parametrize("name,cls", [
+    # deterministic model outputs: any drift is a regression
+    ("netplan/resnet18/no_fusion", "exact"),
+    ("netplan/resnet18/resident_edges", "exact"),
+    ("sim/alexnet/passive/bus_mwords", "exact"),
+    ("sim/alexnet/passive/latency_ms", "exact"),
+    ("sim/alexnet/active_latency_saving_pct", "exact"),
+    ("simplan/alexnet/fused_ms", "exact"),
+    ("dse/sim_scalar/resnet18/P2048", "exact"),   # derived = candidate count
+    # wall-clock ratios: machine-dependent, floor-checked only
+    ("dse/sim_speedup/resnet18/P2048", "speedup"),
+    ("dse/speedup/resnet18/total", "speedup"),
+])
+def test_metric_classification(name, cls):
+    assert bench_run._metric_class(name) == cls
+
+
+def _write_artifact(path, rows):
+    with open(path, "w") as fh:
+        json.dump([bench_run.parse_row(r) for r in rows], fh)
+
+
+def test_check_passes_on_exact_match_and_skips_missing(tmp_path,
+                                                       monkeypatch):
+    art = tmp_path / "BENCH_stub.json"
+    _write_artifact(art, ["a/bus_mwords,10,1.25",
+                          "a/latency_ms,10,2.0",
+                          "a/speedup,10,50.0",
+                          "a/full_only_row,10,7.0"])
+    monkeypatch.setattr(bench_run, "ARTIFACTS", {"stub": art.name})
+    monkeypatch.setattr(bench_run, "_ROOT", str(tmp_path))
+    # deterministic rows identical, speedup above the 20% floor (even though
+    # slower than committed), fourth row absent from the re-run
+    sections = {"stub": lambda: ["a/bus_mwords,99,1.25", "a/latency_ms,99,2.0",
+                                 "a/speedup,99,14.0"]}
+    assert bench_run.check_benchmarks(sections) == 0
+
+
+def test_check_fails_on_model_drift_and_speedup_collapse(tmp_path,
+                                                         monkeypatch):
+    art = tmp_path / "BENCH_stub.json"
+    _write_artifact(art, ["a/bus_mwords,10,1.25", "a/latency_ms,10,2.0",
+                          "a/speedup,10,50.0"])
+    monkeypatch.setattr(bench_run, "ARTIFACTS", {"stub": art.name})
+    monkeypatch.setattr(bench_run, "_ROOT", str(tmp_path))
+    sections = {"stub": lambda: ["a/bus_mwords,99,1.26",   # any drift fails
+                                 "a/latency_ms,99,2.5",    # deterministic too
+                                 "a/speedup,99,2.0"]}      # below 20% floor
+    assert bench_run.check_benchmarks(sections) == 3
+    # a looser floor forgives the speedup row but never deterministic drift
+    assert bench_run.check_benchmarks(sections, tol=0.02) == 2
+
+
+def test_check_cli_exit_code(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr(bench_run, "ARTIFACTS", {})
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["check"])       # nothing to compare -> clean exit
+    assert not exc.value.code
+    assert "0 failed" in capsys.readouterr().out

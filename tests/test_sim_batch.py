@@ -1,0 +1,267 @@
+"""`repro.sim.batch`, the grid-rate evaluator: every metric column must equal
+scalar ``simulate()`` float-exactly — across random conv and matmul workloads,
+both controllers, the netplan residency variants (``spilled_in_words`` /
+``out_spilled``), non-default hardware parameters, and the full candidate
+grids of all 8 zoo CNNs — and the ``sim_*`` objectives/netplan paths built on
+it must agree with their scalar-loop predecessors."""
+
+import json
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_stub import given, settings, st
+
+import numpy as np
+
+from repro import plan, sim
+from repro.core.cnn_zoo import PAPER_CNNS
+from repro.plan import conv_model, dse, netplan
+from repro.plan.objectives import OBJECTIVES
+from repro.plan.schedule import Controller
+from repro.plan.space import Candidates
+from repro.plan.workload import ConvWorkload, MatmulWorkload
+from repro.sim import engine
+from repro.sim.batch import simulate_batch
+
+CONTROLLERS = (Controller.PASSIVE, Controller.ACTIVE)
+
+# Every numeric SimReport metric the batch evaluator mirrors.
+METRICS = ("cycles", "latency_s", "energy_pj", "interconnect_words",
+           "input_words", "output_words", "sram_reads", "sram_writes",
+           "interconnect_bytes", "dram_words", "dram_bytes", "row_hits",
+           "row_misses", "bank_conflicts", "avg_bw_bytes_s",
+           "peak_bw_bytes_s", "row_miss_rate")
+
+
+def assert_batch_matches_scalar(wl, cands, controller, params=None,
+                                spilled=None, out_spilled=True):
+    """Float-exact (``==``, not approx) comparison on every metric."""
+    res = simulate_batch(wl, cands, controller, params,
+                         spilled_in_words=spilled, out_spilled=out_spilled)
+    assert len(res) == len(cands)
+    for i in range(len(cands)):
+        rep = sim.simulate(wl, cands.schedule_at(i, controller), params,
+                           spilled_in_words=spilled, out_spilled=out_spilled)
+        for f in METRICS:
+            got = res.metric(f)[i]
+            want = getattr(rep, f)
+            assert got == want, (wl.name, controller, spilled, out_spilled,
+                                 i, f, want, got)
+        for key, val in rep.energy_breakdown.items():
+            assert res.energy_breakdown[key][i] == val, (wl.name, key)
+
+
+# --------------------------------------------------------------- properties
+@settings(max_examples=25, deadline=None)
+@given(cin=st.integers(1, 80), cout=st.integers(1, 80),
+       k=st.sampled_from([1, 3, 5]), hw=st.integers(2, 20),
+       g=st.sampled_from([1, 2]), budget=st.sampled_from([512, 2048]),
+       controller=st.sampled_from(CONTROLLERS),
+       spill_num=st.integers(0, 4), out_spilled=st.booleans())
+def test_property_conv_batch_equals_scalar(cin, cout, k, hw, g, budget,
+                                           controller, spill_num,
+                                           out_spilled):
+    """Random conv workloads x controllers x residency variants: the batch
+    evaluator is float-exactly the scalar walk over the exact-search grid."""
+    wl = ConvWorkload(name="prop", cin=cin * g, cout=cout * g, k=k,
+                      wi=hw, hi=hw, wo=hw, ho=hw, groups=g)
+    m, n = conv_model.conv_exact_candidates(wl, budget)
+    cands = Candidates(kind="conv", bm=m, bn=n, bk=np.zeros_like(m))
+    spilled = (wl.in_acts * spill_num) // 4
+    assert_batch_matches_scalar(wl, cands, controller,
+                                spilled=spilled, out_spilled=out_spilled)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 600), n=st.integers(1, 600), k=st.integers(1, 600),
+       controller=st.sampled_from(CONTROLLERS),
+       spill_num=st.integers(0, 4), out_spilled=st.booleans())
+def test_property_gemm_batch_equals_scalar(m, n, k, controller, spill_num,
+                                           out_spilled):
+    """Random matmul workloads: ditto over the aligned-block grid plus a few
+    deliberately ragged blockings."""
+    wl = MatmulWorkload(m=m, n=n, k=k)
+    cands = dse.AlignedBlockSpace(max_block=512)(wl, 1 << 22)
+    # append ragged blocks that exercise the remainder slots
+    ragged = [(1, 1, 1), (m, n, k), (max(1, m // 3), max(1, n // 3),
+                                     max(1, k // 3))]
+    cands = Candidates(
+        kind="matmul",
+        bm=np.concatenate([cands.bm, [b[0] for b in ragged]]),
+        bn=np.concatenate([cands.bn, [b[1] for b in ragged]]),
+        bk=np.concatenate([cands.bk, [b[2] for b in ragged]]))
+    spilled = (wl.m * wl.k * spill_num) // 4
+    assert_batch_matches_scalar(wl, cands, controller,
+                                spilled=spilled, out_spilled=out_spilled)
+
+
+# ------------------------------------------------------------- zoo equality
+@pytest.mark.parametrize("controller", CONTROLLERS)
+@pytest.mark.parametrize("net", PAPER_CNNS)
+def test_all_zoo_cnns_batch_equals_scalar(net, controller):
+    """The acceptance sweep: every layer of every zoo CNN, full exact-search
+    grid, both controllers — word totals bit-for-bit, cycles/energy to the
+    last float."""
+    for wl in plan.conv_workloads(net):
+        m, n = conv_model.conv_exact_candidates(wl, 2048)
+        cands = Candidates(kind="conv", bm=m, bn=n, bk=np.zeros_like(m))
+        assert_batch_matches_scalar(wl, cands, controller)
+
+
+def test_batch_nondefault_params_match_scalar():
+    wl = plan.conv_workloads("alexnet")[2]
+    m, n = conv_model.conv_exact_candidates(wl, 2048)
+    cands = Candidates(kind="conv", bm=m, bn=n, bk=np.zeros_like(m))
+    for params in (sim.SimParams(dma_double_buffer=False),
+                   sim.SimParams(sram=sim.SramParams(ports_per_bank=1)),
+                   sim.SimParams(dram=sim.DramParams(row_bytes=256,
+                                                     t_row_miss=400),
+                                 bus_bytes_per_cycle=4)):
+        assert_batch_matches_scalar(wl, cands, Controller.ACTIVE, params)
+
+
+def test_batch_guards():
+    conv = plan.conv_workloads("alexnet")[0]
+    gemm = MatmulWorkload(m=64, n=64, k=64)
+    conv_cands = Candidates.single("conv", 3, 8)
+    gemm_cands = Candidates.single("matmul", 128, 128, 128)
+    with pytest.raises(ValueError):
+        simulate_batch(conv, gemm_cands)
+    with pytest.raises(ValueError):
+        simulate_batch(gemm, conv_cands)
+    with pytest.raises(ValueError):
+        simulate_batch(conv, conv_cands, spilled_in_words=conv.in_acts + 1)
+    with pytest.raises(KeyError):
+        simulate_batch(conv, conv_cands).metric("not_a_metric")
+
+
+# ------------------------------------------------------- objectives rewrite
+def test_sim_objectives_are_hoisted_singletons():
+    """Satellite: the registered objectives are the module-level instances —
+    repeated sweeps share them instead of re-closing over the params."""
+    assert OBJECTIVES["sim_latency"] is sim.sim_latency
+    assert OBJECTIVES["sim_energy"] is sim.sim_energy
+    assert sim.sim_latency.params is sim.DEFAULT_PARAMS
+    assert sim.sim_latency.metric == "latency_s"
+    # the registered name is preserved (dse.sweep labels rows with it)
+    assert sim.sim_latency.__name__ == "sim_latency"
+    assert sim.sim_energy.__name__ == "sim_energy"
+    # distinct instances per make_sim_objective call (custom params)
+    custom = sim.make_sim_objective("latency_s")
+    assert custom is not sim.sim_latency
+
+
+def test_batched_objective_equals_scalar_objective():
+    wl = plan.conv_workloads("resnet18")[5]
+    cands = dse.ConvExactSpace()(wl, 2048)
+    for metric in ("latency_s", "energy_pj"):
+        scalar = sim.scalar_sim_objective(metric)
+        batched = sim.make_sim_objective(metric)
+        for ctrl in CONTROLLERS:
+            a = scalar(wl, cands, ctrl)
+            b = batched(wl, cands, ctrl)
+            assert np.array_equal(a, b), (metric, ctrl)
+
+
+# ----------------------------------------------------- engine bound hygiene
+def test_epoch_phase_idle_and_tie_break():
+    """Satellite: a degenerate zero-work epoch classifies as ``idle`` (not
+    ``compute``), and the compute > sram > bus tie-break is deterministic."""
+    p = sim.DEFAULT_PARAMS
+    zero = engine._Epoch(name="z", count=1, compute_macs=0, fetch_words=0.0,
+                         fetch_bytes=0.0, proc_bus_words=0, proc_bus_bytes=0.0,
+                         engine_sram_words=0, acc_sram_words=0, rmw_words=0)
+    assert engine._epoch_phase(p, zero, "l").bound == "idle"
+    # compute == sram tie -> compute wins
+    tie = engine._Epoch(name="t", count=1, compute_macs=p.macs_per_cycle,
+                        fetch_words=0.0, fetch_bytes=0.0, proc_bus_words=0,
+                        proc_bus_bytes=0.0,
+                        engine_sram_words=p.sram.words_per_cycle,
+                        acc_sram_words=0, rmw_words=0)
+    assert engine._epoch_phase(p, tie, "l").bound == "compute"
+    # sram strictly dominates -> sram
+    sram = engine._Epoch(name="s", count=1, compute_macs=1, fetch_words=0.0,
+                         fetch_bytes=0.0, proc_bus_words=0, proc_bus_bytes=0.0,
+                         engine_sram_words=4 * p.sram.words_per_cycle,
+                         acc_sram_words=0, rmw_words=0)
+    assert engine._epoch_phase(p, sram, "l").bound == "sram"
+
+
+# ------------------------------------------------- sim-objective netplan
+@pytest.mark.parametrize("controller", ("passive", "active"))
+def test_plan_graph_sim_objective_baseline_is_per_layer_plan(controller):
+    """Acceptance: the no-residency baseline of a sim-objective plan_graph
+    equals per-layer ``plan(strategy="sim_latency")`` schedules exactly."""
+    for net in ("alexnet", "squeezenet"):
+        netp = netplan.plan_graph(net, 2048, "exact_opt", controller,
+                                  residency_bytes=0, objective="sim_latency")
+        per_layer = [plan.plan(w, 2048, "sim_latency", controller).schedule
+                     for w in plan.conv_workloads(net)]
+        assert [p.schedule for p in netp.baseline] == per_layer
+        assert [netp.schedules[n.name] for n in netp.graph.workload_nodes] \
+            == per_layer
+
+
+def test_plan_graph_sim_objective_fused_no_slower_than_baseline():
+    """The sim-scored beam never returns a plan simulating slower than the
+    per-layer no-fusion answer, and its residency respects the budget."""
+    for net in ("resnet18", "squeezenet"):
+        netp = netplan.plan_graph(net, 2048, "exact_opt", "active",
+                                  objective="sim_latency")
+        fused = netp.simulate()
+        base = sum(sim.simulate(p.workload, p.schedule).cycles
+                   for p in netp.baseline)
+        assert fused.cycles <= base, net
+        assert netp.peak_resident_bytes <= netp.residency_bytes
+
+
+def test_plan_graph_sim_strategy_uses_sim_beam():
+    """``strategy="sim_latency"`` and ``strategy="exact_opt", objective=
+    "sim_latency"`` are the same search (same spaces, same scoring)."""
+    a = netplan.plan_graph("alexnet", 2048, "sim_latency", "active")
+    b = netplan.plan_graph("alexnet", 2048, "exact_opt", "active",
+                           objective="sim_latency")
+    assert a.schedules == b.schedules
+    assert a.resident_tensors == b.resident_tensors
+
+
+def test_plan_graph_word_objective_unchanged_and_bad_objective_rejected():
+    base = netplan.plan_graph("alexnet", 2048, "exact_opt", "active")
+    explicit = netplan.plan_graph("alexnet", 2048, "exact_opt", "active",
+                                  objective="interconnect_words")
+    assert base.schedules == explicit.schedules
+    assert base.traffic == explicit.traffic
+    with pytest.raises(ValueError):
+        netplan.plan_graph("alexnet", 2048, "exact_opt", "active",
+                           objective="sram_accesses")
+
+
+def test_simulate_network_node_report_cache_hits():
+    sim.clear_node_report_cache()
+    netp = netplan.plan_graph("alexnet", 2048, "exact_opt", "passive",
+                              residency_bytes=0)
+    r1 = sim.simulate_network(netp)
+    misses = sim.node_report_cache_info().misses
+    r2 = sim.simulate_network(netp)
+    info = sim.node_report_cache_info()
+    assert info.misses == misses            # second run fully cached
+    assert info.hits >= misses
+    assert r1.interconnect_words == r2.interconnect_words
+    assert r1.cycles == r2.cycles
+
+
+# ------------------------------------------------------- committed artifact
+def test_committed_sim_speedup_row_meets_target():
+    """The committed BENCH_sim.json records the grid-rate speedup; the
+    acceptance floor is 50x on the resnet18 ConvExactSpace sweep."""
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_sim.json")
+    with open(path) as fh:
+        rows = {r["name"]: r for r in json.load(fh)}
+    row = rows["dse/sim_speedup/resnet18/P2048"]
+    assert row["derived"] >= 50.0
