@@ -283,3 +283,23 @@ def dse_pareto() -> list[str]:
                         f",{r['us_per_call']:.0f}"
                         f",{r['interconnect_words'] / 1e6:.2f}")
     return rows
+
+
+def check_plans_rows(smoke: bool = False) -> list[str]:
+    """Static verification status of every zoo NetPlan (`repro.check`):
+    derived = diagnostic count, which must be exactly 0 — a non-zero value is
+    a planner or checker regression, caught by ``run.py check`` since the
+    rows are committed as ``BENCH_check.json``. us_per_call = plan+verify
+    wall-clock (not compared). The codebase lint rides along as one row."""
+    import repro.check as rc
+
+    nets = ("alexnet", "squeezenet", "resnet18") if smoke else PAPER_CNNS
+    rows = []
+    for net in nets:
+        for ctrl in ("passive", "active"):
+            diags, timings = rc.check_plans((net,), (ctrl,))
+            us = timings[f"{net}/{ctrl}"] * 1e6
+            rows.append(f"check/{net}/{ctrl},{us:.0f},{len(diags)}")
+    (lint, us) = _timed(rc.check_codebase)
+    rows.append(f"check/codebase,{us:.0f},{len(lint)}")
+    return rows

@@ -21,6 +21,10 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
   simplan — sim-objective network planning: plan_graph(..., objective=
             "sim_latency") on every zoo CNN, fused vs no-fusion simulated
             latency (with --json, also written to BENCH_simplan.json)
+  check-plans — static verification (repro.check): diagnostic count per zoo
+            NetPlan x controller plus the codebase lint; every row's
+            derived value must be exactly 0 (with --json, written to
+            BENCH_check.json and guarded by ``check``)
   kernels — VMEM-level active/passive traffic + interpret timings
 
 Usage: python benchmarks/run.py [section] [--json] [--smoke]
@@ -63,7 +67,8 @@ def parse_row(row: str) -> dict:
 # Sections whose rows are additionally tracked as committed BENCH_* artifacts
 # (and re-validated by the ``check`` regression guard).
 ARTIFACTS = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json",
-             "simplan": "BENCH_simplan.json"}
+             "simplan": "BENCH_simplan.json",
+             "check-plans": "BENCH_check.json"}
 
 # ``check`` tolerance classes. Every ``derived`` value in the committed
 # artifacts is a deterministic model output (word counts, simulated
@@ -140,6 +145,8 @@ def main(argv: list[str] | None = None) -> None:
         "sim": functools.partial(paper_tables.sim_bandwidth, smoke=smoke),
         "simplan": functools.partial(paper_tables.simplan_latency,
                                      smoke=smoke),
+        "check-plans": functools.partial(paper_tables.check_plans_rows,
+                                         smoke=smoke),
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }

@@ -1,0 +1,47 @@
+"""`repro.check` — static plan/kernel verifier + unit-discipline lint.
+
+Two layers, one diagnostic currency (`Diagnostic`, stable ``RPC``/``RPL``
+codes):
+
+  * **IR verifier** (`check`, `verify`): proves Schedules satisfy eq (1) and
+    the block/extent/VMEM budgets, Plans' recorded traffic matches the
+    analytical model word-for-word, NetworkGraph edges conserve words and
+    carry consistent dtypes, NetPlans' residency sets fit their byte budget
+    over live intervals, and Pallas launches (`check_network_kernels`) have
+    well-formed BlockSpec geometry — all before anything runs or compiles.
+  * **Codebase lint** (`check_codebase`, rules in ``tools/check_rules.py``):
+    AST rules keeping words-vs-bytes conversions, energy constants, and
+    deprecated shims where they belong.
+
+CLI: ``python -m repro.check [--plans] [--codebase] [--github]``.
+Inline: ``plan.plan(..., checked=True)``, ``plan.plan_graph(...,
+checked=True)``, ``sim.simulate(..., checked=True)``; `run_network_kernels`
+always pre-flights its launches.
+"""
+
+from repro.check.api import check_codebase, check_plans, verify
+from repro.check.diagnostics import (CODES, CheckError, CodeInfo, Diagnostic,
+                                     Severity, code_table, errors,
+                                     raise_on_error, render_all)
+from repro.check.kernels import (LaunchSpec, OperandSpec, check_conv_launch,
+                                 check_launch, check_matmul_launch,
+                                 check_network_kernels,
+                                 preflight_network_kernels)
+from repro.check.lint import (LintRule, default_rules, lint_file, lint_repo,
+                              load_rules)
+from repro.check.passes import (check, check_graph, check_netplan, check_plan,
+                                check_schedule, check_traffic, check_workload,
+                                summarize)
+
+__all__ = [
+    "Diagnostic", "Severity", "CodeInfo", "CODES", "CheckError",
+    "errors", "raise_on_error", "render_all", "code_table",
+    "check", "verify", "summarize",
+    "check_workload", "check_schedule", "check_traffic", "check_plan",
+    "check_graph", "check_netplan",
+    "LaunchSpec", "OperandSpec", "check_launch", "check_conv_launch",
+    "check_matmul_launch", "check_network_kernels",
+    "preflight_network_kernels",
+    "LintRule", "default_rules", "load_rules", "lint_file", "lint_repo",
+    "check_plans", "check_codebase",
+]

@@ -1,0 +1,78 @@
+"""CLI: ``python -m repro.check [--plans] [--codebase] [--github]``.
+
+With no layer flag, both layers run. Exit status 1 iff any error-severity
+diagnostic fired; warnings print but do not fail the build. ``--github``
+renders GitHub Actions ``::error``/``::warning`` annotations for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional, Sequence
+
+from repro.check.api import check_codebase, check_plans
+from repro.check.diagnostics import (CODES, Diagnostic, code_table, errors,
+                                     render_all)
+from repro.core.cnn_zoo import PAPER_CNNS
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="static plan/kernel verifier and codebase lint")
+    ap.add_argument("--plans", action="store_true",
+                    help="plan the zoo CNNs under both controllers and "
+                         "verify every NetPlan")
+    ap.add_argument("--codebase", action="store_true",
+                    help="run the AST lint (tools/check_rules.py)")
+    ap.add_argument("--github", action="store_true",
+                    help="render diagnostics as GitHub Actions annotations")
+    ap.add_argument("--nets", nargs="*", default=list(PAPER_CNNS),
+                    metavar="NET", help="CNNs for --plans (default: all 8)")
+    ap.add_argument("--controllers", nargs="*",
+                    default=["passive", "active"], metavar="CTRL",
+                    choices=["passive", "active"])
+    ap.add_argument("--strategy", default="exact_opt")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--kernels", action="store_true",
+                    help="also pre-flight the Pallas launch geometry of "
+                         "executable conv nodes under --plans")
+    ap.add_argument("--codes", action="store_true",
+                    help="print the diagnostic-code table and exit")
+    args = ap.parse_args(argv)
+
+    if args.codes:
+        print(code_table())
+        return 0
+
+    run_plans = args.plans or not args.codebase
+    run_lint = args.codebase or not args.plans
+
+    diags: List[Diagnostic] = []
+    if run_lint:
+        found = check_codebase()
+        print(f"repro.check --codebase: {len(found)} diagnostic(s)")
+        diags += found
+    if run_plans:
+        found, timings = check_plans(args.nets, args.controllers,
+                                     args.strategy, args.budget,
+                                     with_kernels=args.kernels)
+        total_s = sum(timings.values())
+        print(f"repro.check --plans: {len(found)} diagnostic(s) over "
+              f"{len(timings)} netplan(s) in {total_s:.2f}s")
+        diags += found
+
+    if diags:
+        print(render_all(diags, github=args.github))
+    n_err = len(errors(diags))
+    n_warn = len(diags) - n_err
+    codes = sorted({d.code for d in diags})
+    tail = f" [{', '.join(codes)}]" if codes else ""
+    print(f"repro.check: {n_err} error(s), {n_warn} warning(s)"
+          f"{tail} — {len(CODES)} codes registered")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

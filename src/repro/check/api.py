@@ -1,0 +1,81 @@
+"""Entry points tying the two layers together.
+
+`verify(obj)` is the inline gate the ``checked=True`` planning/simulation
+modes call: dispatch the IR passes, raise `CheckError` on any error-severity
+diagnostic. `check_plans()` / `check_codebase()` are the CLI/CI sweeps:
+plan every zoo CNN under both controllers and verify the NetPlans, and lint
+the source tree.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import List, Optional, Sequence, Tuple
+
+from repro.check.diagnostics import Diagnostic, raise_on_error
+from repro.check.kernels import check_network_kernels
+from repro.check.lint import lint_repo
+from repro.check.passes import check
+from repro.plan.api import Controller, coerce_strategy
+from repro.core.cnn_zoo import PAPER_CNNS
+
+
+def verify(obj: object, context: str = "", budget: Optional[int] = None
+           ) -> List[Diagnostic]:
+    """Check one IR object and raise `CheckError` on errors; returns the
+    (warning-only) diagnostics otherwise."""
+    diags = check(obj, budget)
+    raise_on_error(diags, context or f"verification of "
+                                     f"{type(obj).__name__} failed")
+    return diags
+
+
+def check_plans(nets: Sequence[str] = PAPER_CNNS,
+                controllers: Sequence[str] = ("passive", "active"),
+                strategy: str = "exact_opt",
+                budget: Optional[int] = None,
+                with_kernels: bool = False,
+                ) -> Tuple[List[Diagnostic], dict[str, float]]:
+    """Plan every (net, controller) pair and verify the NetPlan end to end.
+
+    Returns (diagnostics, wall-clock seconds per "net/controller" subject).
+    With ``with_kernels=True`` also pre-flights the Pallas launch geometry of
+    every dense "same"-padded conv node (non-executable nodes are skipped —
+    the network runner never launches them).
+    """
+    from repro.plan.netplan import plan_graph
+
+    strat = coerce_strategy(strategy)
+    diags: List[Diagnostic] = []
+    timings: dict[str, float] = {}
+    for net in nets:
+        for ctrl in controllers:
+            t0 = time.perf_counter()
+            netp = plan_graph(net, budget=budget, strategy=strat,
+                              controller=Controller(ctrl))
+            found = check(netp)
+            if with_kernels:
+                g = netp.graph
+                launchable = [
+                    n for n in g.workload_nodes
+                    if n.workload is not None
+                    and getattr(n.workload, "groups", 0) == 1
+                    and (n.workload.hi + 2 * (n.workload.k // 2)
+                         - n.workload.k) // n.workload.stride + 1
+                    == n.workload.ho]
+                sub = {n.name: netp.schedules.get(n.name) for n in launchable}
+                found += [d for d in check_network_kernels(g, sub)
+                          if d.code != "RPC033"]
+            diags += [Diagnostic(d.code, f"{net}/{ctrl}:{d.subject}",
+                                 d.message, d.severity, d.hint, d.file,
+                                 d.line) for d in found]
+            timings[f"{net}/{ctrl}"] = time.perf_counter() - t0
+    return diags, timings
+
+
+def check_codebase(repo_root: Optional[pathlib.Path] = None
+                   ) -> List[Diagnostic]:
+    """Run the AST lint (tools/check_rules.py rule set) over the source
+    roots."""
+    return lint_repo(repo_root)

@@ -1,0 +1,294 @@
+"""Pallas launch pre-flight: prove a kernel's BlockSpec geometry before
+anything compiles.
+
+`conv2d_psum` / `psum_matmul` pick their grid, BlockSpecs, and scratch from a
+`Schedule`; a malformed launch (block not dividing the padded array, an index
+map addressing past the array, a VMEM working set over budget) surfaces from
+Mosaic as a deep compile error — or worse, as silent padding garbage under
+``interpret=True``. This module re-derives the exact launch geometry the
+kernels build (same clamping, same padding) as plain integers and checks it
+statically, so `run_network_kernels` can reject a bad plan with an RPC03x
+diagnostic *before* the first `pallas_call`.
+
+The geometry here must mirror ``repro.kernels.conv2d_psum`` /
+``repro.kernels.psum_matmul``; the pin tests in ``tests/test_check.py`` run
+both and assert the checker admits exactly what the kernels execute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.check.diagnostics import Diagnostic, raise_on_error
+from repro.plan.gemm_model import VMEM_BYTES
+from repro.plan.graph import NetworkGraph
+from repro.plan.schedule import Schedule
+from repro.plan.workload import ConvWorkload
+
+IndexMap = Callable[..., Tuple[int, ...]]
+
+# Grids with at most this many points get every point's index map evaluated;
+# larger grids are sampled at the corners (sound for the kernels' affine
+# projection maps, which are monotone in each grid coordinate).
+_EXHAUSTIVE_GRID = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    """One pallas_call operand: its full (padded) array and its BlockSpec."""
+
+    name: str
+    array_shape: Tuple[int, ...]
+    block_shape: Tuple[int, ...]
+    index_map: IndexMap
+    elem_bytes: int = 4
+
+    @property
+    def block_bytes(self) -> int:
+        n = self.elem_bytes
+        for d in self.block_shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchSpec:
+    """A complete launch description: grid + operands + scratch, checkable
+    without touching jax."""
+
+    subject: str
+    grid: Tuple[int, ...]
+    operands: Tuple[OperandSpec, ...]
+    scratch_bytes: int = 0
+
+    @property
+    def vmem_bytes(self) -> int:
+        return sum(op.block_bytes for op in self.operands) + self.scratch_bytes
+
+
+def _grid_points(grid: Tuple[int, ...]):
+    total = 1
+    for g in grid:
+        total *= g
+    ranges: List[Sequence[int]]
+    if total <= _EXHAUSTIVE_GRID:
+        ranges = [range(g) for g in grid]
+    else:
+        ranges = [sorted({0, g - 1}) for g in grid]
+    return itertools.product(*ranges)
+
+
+def check_launch(launch: LaunchSpec,
+                 vmem_budget: Optional[int] = None) -> List[Diagnostic]:
+    """RPC030 (divisibility), RPC031 (index map range / rank), RPC032 (VMEM)."""
+    out: List[Diagnostic] = []
+    budget = VMEM_BYTES if vmem_budget is None else int(vmem_budget)
+    if any(g < 1 for g in launch.grid):
+        out.append(Diagnostic(
+            "RPC031", launch.subject, f"empty grid {launch.grid}"))
+        return out
+    for op in launch.operands:
+        if len(op.block_shape) != len(op.array_shape):
+            out.append(Diagnostic(
+                "RPC031", launch.subject,
+                f"{op.name}: block rank {len(op.block_shape)} != array rank "
+                f"{len(op.array_shape)}"))
+            continue
+        if any(b < 1 for b in op.block_shape):
+            out.append(Diagnostic(
+                "RPC030", launch.subject,
+                f"{op.name}: non-positive block {op.block_shape}"))
+            continue
+        if any(a % b for a, b in zip(op.array_shape, op.block_shape)):
+            out.append(Diagnostic(
+                "RPC030", launch.subject,
+                f"{op.name}: block {op.block_shape} does not divide the "
+                f"padded array {op.array_shape}"))
+            continue
+        bounds = tuple(a // b for a, b in
+                       zip(op.array_shape, op.block_shape))
+        for pt in _grid_points(launch.grid):
+            idx = tuple(op.index_map(*pt))
+            if len(idx) != len(bounds):
+                out.append(Diagnostic(
+                    "RPC031", launch.subject,
+                    f"{op.name}: index map returns rank {len(idx)}, "
+                    f"expected {len(bounds)}"))
+                break
+            if any(i < 0 or i >= hi for i, hi in zip(idx, bounds)):
+                out.append(Diagnostic(
+                    "RPC031", launch.subject,
+                    f"{op.name}: index map sends grid point {pt} to block "
+                    f"{idx}, valid range {tuple((0, hi - 1) for hi in bounds)}"
+                ))
+                break
+    if launch.vmem_bytes > budget:
+        out.append(Diagnostic(
+            "RPC032", launch.subject,
+            f"per-step VMEM footprint {launch.vmem_bytes} B (blocks "
+            f"{launch.vmem_bytes - launch.scratch_bytes} + scratch "
+            f"{launch.scratch_bytes}) > budget {budget} B"))
+    return out
+
+
+# ------------------------------------------------------------ conv2d_psum
+def conv_launch(cin: int, hp: int, wp: int, cout: int, kk: int, stride: int,
+                block_m: int, block_n: int, subject: str = "conv2d_psum",
+                elem_bytes: int = 4) -> LaunchSpec:
+    """Re-derive `conv2d_psum`'s launch for x (Cin, Hp, Wp), w (Cout, Cin,
+    K, K) — same clamp-to-extent and pad-to-multiple the kernel applies."""
+    ho = (hp - kk) // stride + 1
+    wo = (wp - kk) // stride + 1
+    bm = max(1, min(block_m, cin))
+    bn = max(1, min(block_n, cout))
+    cin_p = cin + (-cin) % bm
+    cout_p = cout + (-cout) % bn
+    n_co = cout_p // bn
+    n_ci = cin_p // bm
+    return LaunchSpec(
+        subject=subject,
+        grid=(n_co, n_ci),
+        operands=(
+            OperandSpec("x", (cin_p, hp, wp), (bm, hp, wp),
+                        lambda co, ci: (ci, 0, 0), elem_bytes),
+            OperandSpec("w", (cout_p, cin_p, kk, kk), (bn, bm, kk, kk),
+                        lambda co, ci: (co, ci, 0, 0), elem_bytes),
+            OperandSpec("out", (cout_p, ho, wo), (bn, ho, wo),
+                        lambda co, ci: (co, 0, 0), elem_bytes),
+        ),
+        scratch_bytes=bn * ho * wo * 4,       # fp32 accumulator
+    )
+
+
+def check_conv_launch(wl: ConvWorkload, schedule: Schedule,
+                      subject: Optional[str] = None,
+                      vmem_budget: Optional[int] = None) -> List[Diagnostic]:
+    """Pre-flight one conv node as `run_network_kernels` would launch it:
+    channel-concatenated "same"-padded input, schedule blocks."""
+    subject = subject or getattr(wl, "name", "conv2d_psum")
+    out: List[Diagnostic] = []
+    if schedule.kind != "conv":
+        out.append(Diagnostic(
+            "RPC003", subject,
+            f"kernel launch for a conv needs kind='conv', got "
+            f"{schedule.kind!r}"))
+        return out
+    if wl.groups != 1:
+        out.append(Diagnostic(
+            "RPC031", subject,
+            f"conv2d_psum executes dense convs only (groups={wl.groups})"))
+        return out
+    pad = wl.k // 2
+    if (wl.hi + 2 * pad - wl.k) // wl.stride + 1 != wl.ho or \
+            (wl.wi + 2 * pad - wl.k) // wl.stride + 1 != wl.wo:
+        out.append(Diagnostic(
+            "RPC031", subject,
+            f"not 'same'-padded: ({wl.hi}x{wl.wi}, k={wl.k}, "
+            f"stride={wl.stride}) cannot produce ({wl.ho}x{wl.wo}); "
+            f"shrink() the graph first"))
+        return out
+    launch = conv_launch(wl.cin, wl.hi + 2 * pad, wl.wi + 2 * pad,
+                         wl.cout, wl.k, wl.stride,
+                         schedule.bm, schedule.bn, subject)
+    return out + check_launch(launch, vmem_budget)
+
+
+# ------------------------------------------------------------ psum_matmul
+def matmul_launch(m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                  controller: str, subject: str = "psum_matmul",
+                  in_bytes: int = 2) -> LaunchSpec:
+    """Re-derive `psum_matmul`'s launch: pad to block multiples, grid order
+    by controller, fp32 accumulator scratch only when active."""
+    mp = m + (-m) % bm
+    kp = k + (-k) % bk
+    np_ = n + (-n) % bn
+    gm, gn, gk = mp // bm, np_ // bn, kp // bk
+    if controller == "active":
+        grid = (gm, gn, gk)
+        x_map: IndexMap = lambda i, j, kk: (i, kk)      # noqa: E731
+        w_map: IndexMap = lambda i, j, kk: (kk, j)      # noqa: E731
+        o_map: IndexMap = lambda i, j, kk: (i, j)       # noqa: E731
+        out_bytes, scratch = in_bytes, bm * bn * 4
+    else:
+        grid = (gk, gm, gn)
+        x_map = lambda kk, i, j: (i, kk)                # noqa: E731
+        w_map = lambda kk, i, j: (kk, j)                # noqa: E731
+        o_map = lambda kk, i, j: (i, j)                 # noqa: E731
+        out_bytes, scratch = 4, 0                       # fp32 psum output
+    return LaunchSpec(
+        subject=subject,
+        grid=grid,
+        operands=(
+            OperandSpec("x", (mp, kp), (bm, bk), x_map, in_bytes),
+            OperandSpec("w", (kp, np_), (bk, bn), w_map, in_bytes),
+            OperandSpec("out", (mp, np_), (bm, bn), o_map, out_bytes),
+        ),
+        scratch_bytes=scratch,
+    )
+
+
+def check_matmul_launch(m: int, k: int, n: int, schedule: Schedule,
+                        subject: str = "psum_matmul",
+                        vmem_budget: Optional[int] = None
+                        ) -> List[Diagnostic]:
+    if schedule.kind != "matmul":
+        return [Diagnostic(
+            "RPC003", subject,
+            f"kernel launch for a GEMM needs kind='matmul', got "
+            f"{schedule.kind!r}")]
+    launch = matmul_launch(m, k, n, schedule.bm, schedule.bn, schedule.bk,
+                           schedule.controller.value, subject)
+    return check_launch(launch, vmem_budget)
+
+
+# ------------------------------------------------------- whole-network gate
+def check_network_kernels(graph: NetworkGraph, schedules: Any,
+                          params: Optional[Mapping[str, object]] = None,
+                          vmem_budget: Optional[int] = None
+                          ) -> List[Diagnostic]:
+    """Pre-flight every conv node `run_network_kernels` would launch.
+
+    ``schedules`` is a NetPlan or a {node name: Schedule} mapping, exactly as
+    the runner accepts. RPC033 for nodes with no schedule (or, when ``params``
+    is given, no weights); RPC031 for weights whose shape disagrees with the
+    workload; RPC030/031/032 from the per-node launch geometry.
+    """
+    if hasattr(schedules, "schedules"):      # a NetPlan
+        schedules = schedules.schedules
+    out: List[Diagnostic] = []
+    for node in graph.workload_nodes:
+        wl = node.workload
+        if not isinstance(wl, ConvWorkload):
+            continue       # the network runner only launches convs
+        sched = schedules.get(node.name) if schedules is not None else None
+        if sched is None:
+            out.append(Diagnostic(
+                "RPC033", node.name, "conv node has no schedule"))
+            continue
+        if params is not None:
+            wt = params.get(node.name)
+            if wt is None:
+                out.append(Diagnostic(
+                    "RPC033", node.name, "conv node has no kernel weights"))
+                continue
+            want = (wl.cout, wl.cin, wl.k, wl.k)
+            got = tuple(getattr(wt, "shape", ()))
+            if got != want:
+                out.append(Diagnostic(
+                    "RPC031", node.name,
+                    f"weights shaped {got}, workload needs {want}"))
+                continue
+        out += check_conv_launch(wl, sched, node.name, vmem_budget)
+    return out
+
+
+def preflight_network_kernels(graph: NetworkGraph, schedules: Any,
+                              params: Optional[Mapping[str, object]] = None,
+                              vmem_budget: Optional[int] = None) -> None:
+    """The gate `run_network_kernels` calls before any pallas_call: raises
+    `CheckError` listing every RPC03x error, compiles nothing."""
+    raise_on_error(check_network_kernels(graph, schedules, params,
+                                         vmem_budget),
+                   context="kernel pre-flight failed")

@@ -50,9 +50,16 @@ def run_network_kernels(graph, schedules, params: dict[str, jax.Array],
     ``schedules`` is a `NetPlan` or a {conv node name: Schedule} mapping
     (conv-kind schedules; the kernel always accumulates VMEM-resident).
     Returns {tensor name: value} for every tensor in the graph.
+
+    Every launch is statically pre-flighted first (`repro.check`): missing
+    schedules/weights, weight-shape mismatches, non-dense or non-"same"
+    shapes, BlockSpec geometry and VMEM footprint all raise a
+    `repro.check.CheckError` *before* the first `pallas_call` compiles.
     """
     if hasattr(schedules, "schedules"):      # a NetPlan
         schedules = schedules.schedules
+    from repro.check import preflight_network_kernels
+    preflight_network_kernels(graph, schedules, params)
     values: dict[str, jax.Array] = {}
     key = jax.random.PRNGKey(rng_seed)
     for node in graph.nodes:

@@ -88,7 +88,7 @@ def _plan_cached(workload: Workload, budget: int, strategy: "Strategy | str",
 def plan(workload: Workload, budget: int | None = None,
          strategy: "Strategy | str" = Strategy.PAPER_OPT,
          controller: "Controller | str" = Controller.PASSIVE,
-         exact_iters: bool = True) -> Plan:
+         exact_iters: bool = True, *, checked: bool = False) -> Plan:
     """Plan one workload: choose a `Schedule` and predict its traffic.
 
     budget — P MACs (conv) or VMEM bytes (matmul); None picks the kind's
@@ -96,11 +96,18 @@ def plan(workload: Workload, budget: int | None = None,
     traffic report (False reproduces the paper's real-valued convention).
     ``strategy`` accepts the built-in `Strategy` values and any custom name
     registered through ``repro.plan.dse.register_strategy``.
+    ``checked=True`` runs the `repro.check` verifier passes on the result
+    and raises `repro.check.CheckError` on any error-severity diagnostic
+    (e.g. a budget so small the fallback schedule violates eq 1).
     """
     if budget is None:
         budget = default_budget(workload)
-    return _plan_cached(workload, int(budget), coerce_strategy(strategy),
-                        Controller.coerce(controller), exact_iters)
+    result = _plan_cached(workload, int(budget), coerce_strategy(strategy),
+                          Controller.coerce(controller), exact_iters)
+    if checked:
+        from repro.check import verify      # deferred: check imports plan
+        verify(result, context=f"plan({workload!r}) failed verification")
+    return result
 
 
 def plan_many(workloads, budget: int | None = None,

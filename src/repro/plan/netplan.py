@@ -381,7 +381,7 @@ def plan_graph(graph_or_name, budget: int | None = None,
                controller: "Controller | str" = Controller.PASSIVE,
                residency_bytes: int = DEFAULT_RESIDENCY_BYTES,
                beam_width: int = DEFAULT_BEAM_WIDTH, *,
-               objective=None) -> NetPlan:
+               objective=None, checked: bool = False) -> NetPlan:
     """Plan a whole network graph: joint per-node schedules + fused edges.
 
     Accepts a `NetworkGraph`, a zoo CNN name, or an iterable of ConvLayers.
@@ -398,6 +398,11 @@ def plan_graph(graph_or_name, budget: int | None = None,
     ``simulate_batch`` grid evaluation per node (cached per residency key),
     and the ``no_fusion`` baseline becomes the per-layer sim-optimal plans —
     identical to ``plan(wl, strategy="sim_latency")`` layer by layer.
+
+    ``checked=True`` runs the full `repro.check` NetPlan verifier on the
+    result (graph invariants, per-node feasibility, word conservation, the
+    residency-budget proof) and raises `repro.check.CheckError` on any
+    error-severity diagnostic.
     """
     graph = _coerce_graph(graph_or_name)
     strategy = _api.coerce_strategy(strategy)
@@ -418,8 +423,9 @@ def plan_graph(graph_or_name, budget: int | None = None,
         # answer — skip the candidate grids and the beam entirely.
         chosen = {n.name: p.schedule
                   for n, p in zip(graph.workload_nodes, baseline)}
-        return _assemble(graph, budget, strategy, controller, residency_bytes,
-                         beam_width, chosen, frozenset(), baseline, 0)
+        return _verified(_assemble(graph, budget, strategy, controller,
+                                   residency_bytes, beam_width, chosen,
+                                   frozenset(), baseline, 0), checked)
 
     grids: "dict[int, _NodeGrid | _SimNodeGrid]" = {}
     for i, node in enumerate(graph.nodes):
@@ -518,9 +524,18 @@ def plan_graph(graph_or_name, budget: int | None = None,
                 chosen[node.name] = grids[i].cands.schedule_at(
                     best.choices[wl_idx], controller)
                 wl_idx += 1
-    return _assemble(graph, budget, strategy, controller, residency_bytes,
-                     beam_width, chosen, best.resident, baseline,
-                     best.peak_bytes)
+    return _verified(_assemble(graph, budget, strategy, controller,
+                               residency_bytes, beam_width, chosen,
+                               best.resident, baseline, best.peak_bytes),
+                     checked)
+
+
+def _verified(netp: NetPlan, checked: bool) -> NetPlan:
+    if checked:
+        from repro.check import verify      # deferred: check imports plan
+        verify(netp, context=f"plan_graph({netp.graph.name!r}) failed "
+                             f"verification")
+    return netp
 
 
 def _assemble(graph: NetworkGraph, budget, strategy, controller: Controller,

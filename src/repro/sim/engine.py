@@ -287,7 +287,7 @@ def simulate(workload: Workload, schedule: Schedule,
              params: SimParams | None = None, *,
              spilled_in_words: int | None = None,
              out_spilled: bool = True,
-             name: str | None = None) -> SimReport:
+             name: str | None = None, checked: bool = False) -> SimReport:
     """Simulate one (workload, schedule) pair on the modelled SoC.
 
     ``spilled_in_words`` is the share of the input words that must stream
@@ -297,8 +297,15 @@ def simulate(workload: Workload, schedule: Schedule,
     the fused-edge convention of `repro.plan.netplan`.
 
     Word totals are exact (the analytical model's arithmetic); timing is
-    cycle-approximate (see module docstring).
+    cycle-approximate (see module docstring). ``checked=True`` statically
+    verifies the (workload, schedule) pair through `repro.check` first and
+    raises `repro.check.CheckError` instead of simulating an infeasible
+    schedule.
     """
+    if checked:
+        from repro.check import verify      # deferred: check imports plan
+        verify((workload, schedule),
+               context=f"simulate({name or workload!r}) failed verification")
     params = DEFAULT_PARAMS if params is None else params
     active = schedule.controller is Controller.ACTIVE
     if isinstance(workload, ConvWorkload):

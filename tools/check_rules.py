@@ -1,0 +1,48 @@
+"""The repo's lint rule set, loaded by ``python -m repro.check --codebase``.
+
+Rules live here — next to the conventions they enforce — rather than inside
+the package, so tightening an allowlist is a reviewable one-line diff. Each
+entry is a `repro.check.lint.LintRule`; the ``exempt`` patterns are
+repo-relative globs.
+
+Conventions enforced (codes in ``repro.check.diagnostics.CODES``):
+
+RPL100  words are the model currency. Only the byte-model modules — the
+        traffic/byte models under ``repro.plan``, all of ``repro.sim`` /
+        ``repro.roofline``, and the checker itself — may multiply a count by
+        a dtype width. Everyone else consumes ``TrafficReport.bytes`` /
+        ``Tensor.nbytes`` / ``Schedule.vmem_bytes``.
+RPL101  per-access energy constants are defined once, in
+        ``src/repro/roofline/constants.py``.
+RPL102  never assign a ``*_words`` name from a ``*_bytes`` name (or vice
+        versa) without an explicit conversion. Applies everywhere, tests
+        included-by-omission (tests corrupt units on purpose and are not
+        linted).
+RPL110  ``repro.core.bwmodel`` / ``repro.core.partitioner`` are deprecation
+        shims; new code imports ``repro.plan``. Only the shim package itself
+        may touch them.
+"""
+
+from repro.check.lint import (cross_assign_rule, deprecated_import_rule,
+                              magic_energy_rule, raw_byte_arith_rule)
+
+#: modules allowed to convert words -> bytes
+BYTE_MODEL_MODULES = (
+    "src/repro/plan/traffic.py",       # conv TrafficReport construction
+    "src/repro/plan/gemm_model.py",    # VMEM working sets + GEMM byte model
+    "src/repro/plan/graph.py",         # Tensor.nbytes
+    "src/repro/plan/netplan.py",       # residency-adjusted bus reports
+    "src/repro/plan/objectives.py",    # energy/bytes DSE objectives
+    "src/repro/plan/schedule.py",      # Schedule.vmem_bytes
+    "src/repro/plan/workload.py",      # workload footprint helpers
+    "src/repro/sim/*",                 # the simulator prices bytes
+    "src/repro/roofline/*",            # roofline is a bytes/s model
+    "src/repro/check/*",               # the verifier recomputes conversions
+)
+
+RULES = [
+    raw_byte_arith_rule(BYTE_MODEL_MODULES),
+    magic_energy_rule(("src/repro/roofline/constants.py",)),
+    cross_assign_rule(),
+    deprecated_import_rule(("src/repro/core/*",)),
+]
