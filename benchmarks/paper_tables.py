@@ -303,3 +303,24 @@ def check_plans_rows(smoke: bool = False) -> list[str]:
     (lint, us) = _timed(rc.check_codebase)
     rows.append(f"check/codebase,{us:.0f},{len(lint)}")
     return rows
+
+
+def check_dataflow_rows(smoke: bool = False) -> list[str]:
+    """Kernel-body dataflow certification (`repro.check.dataflow`): derived =
+    certified candidate count per net (every admitted candidate of every
+    launchable conv layer's exact space, both controllers) — a deterministic
+    function of the zoo and the kernels, committed in ``BENCH_check.json``
+    and guarded exactly by ``run.py check``. The closing row counts
+    diagnostics across the whole sweep, which must be exactly 0."""
+    import repro.check as rc
+
+    nets = ("alexnet", "squeezenet", "resnet18") if smoke else PAPER_CNNS
+    rows = []
+    n_diags = 0
+    for net in nets:
+        (out, us) = _timed(lambda n=net: rc.check_dataflow((n,)))
+        diags, timings = out
+        n_diags += len(diags)
+        rows.append(f"dataflow/{net},{us:.0f},{timings.get('_certified', 0)}")
+    rows.append(f"dataflow/diagnostics,0,{n_diags}")
+    return rows

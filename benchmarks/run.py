@@ -25,6 +25,11 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
             NetPlan x controller plus the codebase lint; every row's
             derived value must be exactly 0 (with --json, written to
             BENCH_check.json and guarded by ``check``)
+  check-dataflow — kernel-body dataflow certification (repro.check.dataflow):
+            certified candidate count per zoo CNN (whole exact search
+            spaces, both controllers) plus a must-be-zero diagnostic row
+            (with --json, merged into BENCH_check.json and guarded by
+            ``check``)
   kernels — VMEM-level active/passive traffic + interpret timings
 
 Usage: python benchmarks/run.py [section] [--json] [--smoke]
@@ -68,7 +73,8 @@ def parse_row(row: str) -> dict:
 # (and re-validated by the ``check`` regression guard).
 ARTIFACTS = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json",
              "simplan": "BENCH_simplan.json",
-             "check-plans": "BENCH_check.json"}
+             "check-plans": "BENCH_check.json",
+             "check-dataflow": "BENCH_check.json"}
 
 # ``check`` tolerance classes. Every ``derived`` value in the committed
 # artifacts is a deterministic model output (word counts, simulated
@@ -147,6 +153,8 @@ def main(argv: list[str] | None = None) -> None:
                                      smoke=smoke),
         "check-plans": functools.partial(paper_tables.check_plans_rows,
                                          smoke=smoke),
+        "check-dataflow": functools.partial(paper_tables.check_dataflow_rows,
+                                            smoke=smoke),
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }
@@ -171,8 +179,19 @@ def main(argv: list[str] | None = None) -> None:
         json.dump([parse_row(r) for r in rows], sys.stdout, indent=1)
         print()
         for name, out in artifact_rows.items():
-            with open(artifacts[name], "w") as fh:
-                json.dump([parse_row(r) for r in out], fh, indent=1)
+            # Sections can share an artifact (check-plans and check-dataflow
+            # both land in BENCH_check.json): merge by row name, keeping any
+            # committed row this run did not regenerate.
+            path = artifacts[name]
+            fresh = [parse_row(r) for r in out]
+            if os.path.exists(path):
+                with open(path) as fh:
+                    committed = json.load(fh)
+                produced = {r["name"] for r in fresh}
+                fresh = [r for r in committed
+                         if r["name"] not in produced] + fresh
+            with open(path, "w") as fh:
+                json.dump(fresh, fh, indent=1)
                 fh.write("\n")
     else:
         print("name,us_per_call,derived")

@@ -1,8 +1,12 @@
-"""CLI: ``python -m repro.check [--plans] [--codebase] [--github]``.
+"""CLI: ``python -m repro.check [--plans] [--codebase] [--dataflow]
+[--github]``.
 
-With no layer flag, both layers run. Exit status 1 iff any error-severity
-diagnostic fired; warnings print but do not fail the build. ``--github``
-renders GitHub Actions ``::error``/``::warning`` annotations for CI.
+With no layer flag, the plan verifier and the codebase lint run (the
+classic default); ``--dataflow`` adds the kernel-body dataflow analyzer —
+race/coverage/accumulation proofs plus whole-search-space traffic
+certification (RPC04x). Exit status 1 iff any error-severity diagnostic
+fired; warnings print but do not fail the build. ``--github`` renders
+GitHub Actions ``::error``/``::warning`` annotations for CI.
 """
 
 from __future__ import annotations
@@ -26,6 +30,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "verify every NetPlan")
     ap.add_argument("--codebase", action="store_true",
                     help="run the AST lint (tools/check_rules.py)")
+    ap.add_argument("--dataflow", action="store_true",
+                    help="trace the kernel bodies and certify the RPC04x "
+                         "dataflow/traffic proofs over whole search spaces")
     ap.add_argument("--github", action="store_true",
                     help="render diagnostics as GitHub Actions annotations")
     ap.add_argument("--nets", nargs="*", default=list(PAPER_CNNS),
@@ -46,8 +53,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(code_table())
         return 0
 
-    run_plans = args.plans or not args.codebase
-    run_lint = args.codebase or not args.plans
+    explicit = args.plans or args.codebase or args.dataflow
+    run_plans = args.plans or not explicit
+    run_lint = args.codebase or not explicit
 
     diags: List[Diagnostic] = []
     if run_lint:
@@ -61,6 +69,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         total_s = sum(timings.values())
         print(f"repro.check --plans: {len(found)} diagnostic(s) over "
               f"{len(timings)} netplan(s) in {total_s:.2f}s")
+        diags += found
+    if args.dataflow:
+        from repro.check.dataflow import check_dataflow
+        found, timings = check_dataflow(args.nets, args.controllers)
+        n_cert = int(timings.pop("_certified", 0))
+        total_s = sum(timings.values())
+        print(f"repro.check --dataflow: {len(found)} diagnostic(s), "
+              f"{n_cert} space candidate(s) certified in {total_s:.2f}s")
         diags += found
 
     if diags:

@@ -129,6 +129,42 @@ _register("RPC033", "unplanned-node", Severity.ERROR,
           "plan the whole graph (plan_graph) or pass a complete "
           "{node: Schedule} mapping")
 
+# --- kernel-body dataflow analysis (repro.check.dataflow) -------------------
+_register("RPC040", "write-write-race", Severity.ERROR,
+          "two parallel grid steps may store to the same output block "
+          "(a write is not pinned to every parallel axis its index map drops)",
+          "guard the store with pl.when(program_id(axis) == ...) for each "
+          "parallel axis the operand's index map does not depend on")
+_register("RPC041", "read-before-init", Severity.ERROR,
+          "a scratch accumulator may be read before any grid step "
+          "unconditionally initialized it",
+          "zero the scratch under pl.when(reduction_id == 0) before the "
+          "first read-modify-write")
+_register("RPC042", "incomplete-output-coverage", Severity.ERROR,
+          "the union of written blocks does not cover the output array",
+          "the output index map must reach every block index and the "
+          "writing store must fire for each (check the epilogue guard)")
+_register("RPC043", "accumulation-order-mismatch", Severity.ERROR,
+          "the store/guard structure breaks the revisit chain eq (3)/(7) "
+          "assume, or the RMW counts disagree with the traffic meter",
+          "accumulate over a contiguous innermost 'arbitrary' grid suffix: "
+          "init at step 0, one unguarded RMW per step, drain at the last")
+_register("RPC044", "block-window-alias", Severity.ERROR,
+          "input/output aliasing with index maps that address different "
+          "blocks at the same grid step",
+          "aliased operands must share identical block shapes and index maps "
+          "(in-place updates only)")
+_register("RPC045", "traffic-proof-failed", Severity.ERROR,
+          "the word counts derived from the traced footprint disagree with "
+          "the analytical model (TrafficReport / gemm_model)",
+          "the kernel and the model have diverged; re-derive eqs (2)/(3) for "
+          "the launch or fix the kernel's load/store structure")
+_register("RPC046", "untraceable-kernel", Severity.WARNING,
+          "the kernel body uses constructs outside the abstract "
+          "interpreter's fragment; dataflow proofs were skipped",
+          "keep guards to pl.when(program_id(a) == const) and Ref access to "
+          "load/store/[...] so the analyzer can see the dataflow")
+
 # --- codebase lint ----------------------------------------------------------
 _register("RPL100", "raw-byte-arith", Severity.ERROR,
           "dtype-width multiplication outside the byte-modelling modules",
@@ -142,6 +178,11 @@ _register("RPL102", "words-bytes-cross-assign", Severity.ERROR,
           "a *_words name is assigned from a *_bytes name (or vice versa)",
           "convert explicitly via the dtype width at a byte-model boundary; "
           "never rename a quantity across units")
+_register("RPL103", "raw-pallas-call", Severity.ERROR,
+          "pl.pallas_call invoked outside repro.kernels",
+          "build a repro.kernels.launch.LaunchPlan and execute it with "
+          "launch.run() so the dataflow analyzer sees the same launch that "
+          "runs")
 _register("RPL110", "deprecated-import", Severity.WARNING,
           "import of the deprecated core.bwmodel / core.partitioner shims",
           "import from repro.plan (conv_model / gemm_model) instead")

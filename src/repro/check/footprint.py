@@ -1,0 +1,515 @@
+"""Abstract interpretation of Pallas kernel bodies: symbolic access footprints.
+
+`trace_launch` runs a `repro.kernels.launch.LaunchPlan`'s body once with fake
+refs and fake ``jnp``/``jax``/``pl`` modules, recording every Ref read and
+write as an `Event` tagged with the guard (``pl.when`` predicate) it fired
+under. Guards are `Pred` objects — "grid axis *a* equals coordinate *v*" —
+the only predicate shape the kernels use (``pl.program_id(a) == v``); any
+other control dependence raises `UntraceableKernel`, which the dataflow
+passes degrade to a warning (RPC046) rather than a wrong proof.
+
+The trace is *structural*: it depends on the plan's grid sizes only through
+the integer guard constants (``ci == n_ci - 1``), so one trace per launch
+shape-class suffices and whole candidate spaces can be certified by
+re-normalizing the same abstract events against per-candidate grids
+(`repro.check.dataflow`).
+
+Alongside the body trace, `visit_structure` classifies each operand's
+BlockSpec index map by probing: every block dimension is either a constant,
+the identity of one grid axis, or opaque. From that, `fetch_runs` counts the
+HBM↔VMEM block transfers Pallas issues under lexicographic grid order with
+revisit elision (a copy starts only when the block index changes between
+consecutive steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import types
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+class UntraceableKernel(Exception):
+    """The kernel body used a construct the abstract interpreter cannot
+    soundly model (e.g. a non-``program_id == const`` guard)."""
+
+
+# --------------------------------------------------------------- predicates
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    """Guard atom: grid axis ``axis`` is at coordinate ``value``."""
+
+    axis: int
+    value: int
+
+    def holds(self, coord: int) -> bool:
+        return coord == self.value
+
+
+Guard = Tuple[Pred, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One Ref access recorded during the trace."""
+
+    ref: str
+    kind: str                 # "read" | "write"
+    guard: Guard
+    zero: bool = False        # write of a ref-independent constant fill
+    sources: frozenset = frozenset()   # ref names whose data feeds the value
+
+
+def pinned_axes(guard: Guard) -> frozenset:
+    return frozenset(p.axis for p in guard)
+
+
+def guard_fires(guard: Guard, coords: Dict[int, int]) -> bool:
+    """Does the guard hold at a (partial) coordinate assignment? Axes absent
+    from ``coords`` are treated as satisfying (may-fire semantics)."""
+    return all(p.holds(coords[p.axis]) for p in guard if p.axis in coords)
+
+
+# ------------------------------------------------------------ symbolic values
+def _merge_sources(*vals: Any) -> frozenset:
+    out: frozenset = frozenset()
+    for v in vals:
+        if isinstance(v, SymVal):
+            out |= v.sources
+    return out
+
+
+class SymVal:
+    """A value flowing through the kernel body: which refs it derives from,
+    plus a best-effort concrete shape (the bodies do ``x.shape[0]`` math)."""
+
+    def __init__(self, sources: Iterable[str] = (), shape: Optional[tuple] = None,
+                 zero: bool = False):
+        self.sources = frozenset(sources)
+        self._shape = shape
+        self.zero = zero
+
+    @property
+    def shape(self) -> tuple:
+        if self._shape is None:
+            raise UntraceableKernel("shape of a symbolic value was consumed "
+                                    "but could not be inferred")
+        return self._shape
+
+    @property
+    def dtype(self) -> str:
+        return "sym"
+
+    @property
+    def T(self) -> "SymVal":
+        shp = None if self._shape is None else tuple(reversed(self._shape))
+        return SymVal(self.sources, shp)
+
+    # -- structure-preserving methods the kernel bodies use ------------------
+    def astype(self, _dtype: Any) -> "SymVal":
+        return SymVal(self.sources, self._shape)
+
+    def reshape(self, *shape: Any) -> "SymVal":
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        concrete = tuple(shape) if all(isinstance(s, int) for s in shape) else None
+        return SymVal(self.sources, concrete)
+
+    def sum(self, *a: Any, **k: Any) -> "SymVal":
+        return SymVal(self.sources, None)
+
+    def max(self, *a: Any, **k: Any) -> "SymVal":
+        return SymVal(self.sources, None)
+
+    def min(self, *a: Any, **k: Any) -> "SymVal":
+        return SymVal(self.sources, None)
+
+    def __getitem__(self, key: Any) -> "SymVal":
+        return SymVal(self.sources, _index_shape(self._shape, key))
+
+    def __iter__(self):
+        raise UntraceableKernel("iteration over a symbolic value")
+
+    def _binop(self, other: Any) -> "SymVal":
+        return SymVal(self.sources | _merge_sources(other), self._shape)
+
+    __add__ = __radd__ = __sub__ = __rsub__ = __mul__ = __rmul__ = _binop
+    __truediv__ = __rtruediv__ = __pow__ = __mod__ = __matmul__ = _binop
+    __and__ = __rand__ = __or__ = __ror__ = _binop
+    __lt__ = __le__ = __gt__ = __ge__ = _binop
+
+    def __eq__(self, other: Any) -> "SymVal":   # type: ignore[override]
+        return self._binop(other)
+
+    def __ne__(self, other: Any) -> "SymVal":   # type: ignore[override]
+        return self._binop(other)
+
+    def __hash__(self) -> int:                  # eq is symbolic; identity hash
+        return id(self)
+
+    def __neg__(self) -> "SymVal":
+        return SymVal(self.sources, self._shape)
+
+    def __bool__(self) -> bool:
+        raise UntraceableKernel("branch on a symbolic value")
+
+
+def _index_shape(shape: Optional[tuple], key: Any) -> Optional[tuple]:
+    """Shape after ``val[key]`` for the subscript forms the kernels use."""
+    if shape is None:
+        return None
+    if key is Ellipsis:
+        return shape
+    keys = key if isinstance(key, tuple) else (key,)
+    if any(k is Ellipsis for k in keys):
+        return None if len(keys) > 1 else shape
+    out: List[int] = []
+    for i, d in enumerate(shape):
+        if i >= len(keys):
+            out.append(d)
+        elif isinstance(keys[i], int):
+            continue
+        elif isinstance(keys[i], slice) and keys[i] == slice(None):
+            out.append(d)
+        else:
+            return None
+    return tuple(out)
+
+
+class SymIndex:
+    """``pl.program_id(axis)``: comparisons to ints become `Pred` guards,
+    arithmetic decays to an anonymous `SymVal` (flash's causal id math)."""
+
+    def __init__(self, axis: int):
+        self.axis = axis
+
+    def __eq__(self, other: Any):               # type: ignore[override]
+        if isinstance(other, int):
+            return Pred(self.axis, other)
+        return SymVal()
+
+    def __ne__(self, other: Any):               # type: ignore[override]
+        return SymVal()
+
+    def __hash__(self) -> int:
+        return id(self)
+
+    def _decay(self, other: Any = None) -> SymVal:
+        return SymVal(_merge_sources(other))
+
+    __add__ = __radd__ = __sub__ = __rsub__ = __mul__ = __rmul__ = _decay
+    __floordiv__ = __mod__ = __lt__ = __le__ = __gt__ = __ge__ = _decay
+
+
+# ------------------------------------------------------------------- tracing
+class _Tracer:
+    def __init__(self) -> None:
+        self.events: List[Event] = []
+        self._guards: List[Pred] = []
+
+    def guard(self) -> Guard:
+        return tuple(self._guards)
+
+    def record(self, ref: str, kind: str, zero: bool = False,
+               sources: frozenset = frozenset()) -> None:
+        self.events.append(Event(ref, kind, self.guard(), zero, sources))
+
+
+class TraceRef:
+    """Fake Ref: logs loads/stores to the tracer; shape/dtype are concrete."""
+
+    def __init__(self, tracer: _Tracer, name: str, shape: Tuple[int, ...],
+                 kind: str):
+        self._tracer = tracer
+        self.name = name
+        self.shape = shape
+        self.kind = kind                        # "in" | "out" | "scratch"
+        self.dtype = "ref"
+
+    def __getitem__(self, key: Any) -> SymVal:
+        self._tracer.record(self.name, "read")
+        return SymVal({self.name}, _index_shape(self.shape, key))
+
+    def __setitem__(self, key: Any, value: Any) -> None:
+        zero = isinstance(value, SymVal) and value.zero
+        self._tracer.record(self.name, "write", zero=zero,
+                            sources=_merge_sources(value))
+
+
+class _FakePl:
+    def __init__(self, tracer: _Tracer):
+        self._tracer = tracer
+
+    @staticmethod
+    def program_id(axis: int) -> SymIndex:
+        return SymIndex(axis)
+
+    def when(self, cond: Any) -> Callable:
+        tracer = self._tracer
+
+        def deco(fn: Callable) -> Callable:
+            if not isinstance(cond, Pred):
+                raise UntraceableKernel(
+                    f"pl.when guard is not a 'program_id(a) == const' "
+                    f"predicate: {cond!r}")
+            tracer._guards.append(cond)
+            try:
+                fn()
+            finally:
+                tracer._guards.pop()
+            return fn
+
+        return deco
+
+    def load(self, ref: TraceRef, _idx: Any = None) -> SymVal:
+        self._tracer.record(ref.name, "read")
+        return SymVal({ref.name}, None)
+
+    def store(self, ref: TraceRef, _idx: Any, value: Any) -> None:
+        zero = isinstance(value, SymVal) and value.zero
+        self._tracer.record(ref.name, "write", zero=zero,
+                            sources=_merge_sources(value))
+
+    def __getattr__(self, name: str) -> Any:
+        return _generic_fn
+
+
+def _shape_of(x: Any) -> Optional[tuple]:
+    if isinstance(x, (TraceRef, SymVal)):
+        try:
+            return tuple(x.shape)
+        except UntraceableKernel:
+            return None
+    return None
+
+
+def _generic_fn(*args: Any, **kwargs: Any) -> SymVal:
+    return SymVal(_merge_sources(*args, *kwargs.values()))
+
+
+class _FakeJnp:
+    """Module stand-in: constant fills are recognized (no read of the ref
+    argument!), everything else merges sources."""
+
+    float32 = "float32"
+    float16 = "float16"
+    bfloat16 = "bfloat16"
+    int32 = "int32"
+
+    @staticmethod
+    def zeros_like(x: Any) -> SymVal:
+        return SymVal((), _shape_of(x), zero=True)
+
+    @staticmethod
+    def full_like(x: Any, _fill: Any) -> SymVal:
+        return SymVal((), _shape_of(x), zero=True)
+
+    @staticmethod
+    def zeros(shape: Any, dtype: Any = None) -> SymVal:
+        return SymVal((), tuple(shape) if isinstance(shape, (tuple, list))
+                      else (shape,), zero=True)
+
+    @staticmethod
+    def full(shape: Any, _fill: Any, dtype: Any = None) -> SymVal:
+        return SymVal((), tuple(shape) if isinstance(shape, (tuple, list))
+                      else (shape,), zero=True)
+
+    @staticmethod
+    def dot(a: Any, b: Any, **kw: Any) -> SymVal:
+        sa, sb = _shape_of(a), _shape_of(b)
+        shp = None
+        if sa and sb and len(sa) == 2 and len(sb) == 2:
+            shp = (sa[0], sb[1])
+        return SymVal(_merge_sources(a, b), shp)
+
+    def __getattr__(self, name: str) -> Any:
+        return _generic_fn
+
+
+class _FakeLax:
+    @staticmethod
+    def slice(operand: Any, start: Sequence[int], limit: Sequence[Any],
+              strides: Optional[Sequence[int]] = None) -> SymVal:
+        shp: Optional[tuple] = None
+        try:
+            st = strides or [1] * len(start)
+            shp = tuple(-(-(int(l) - int(s)) // int(d))
+                        for s, l, d in zip(start, limit, st))
+        except (TypeError, ValueError):
+            shp = None
+        return SymVal(_merge_sources(operand), shp)
+
+    @staticmethod
+    def broadcasted_iota(_dtype: Any, shape: Sequence[int], _dim: int) -> SymVal:
+        return SymVal((), tuple(shape))
+
+    def __getattr__(self, name: str) -> Any:
+        return _generic_fn
+
+
+class _FakeModule:
+    """Anything-goes namespace (jax.nn etc.)."""
+
+    def __getattr__(self, name: str) -> Any:
+        return _generic_fn
+
+
+class _FakeJax:
+    def __init__(self) -> None:
+        self.lax = _FakeLax()
+        self.nn = _FakeModule()
+        self.numpy = _FakeJnp()
+
+    def __getattr__(self, name: str) -> Any:
+        return _generic_fn
+
+
+class _AnyActivations:
+    """Stands in for the kernels' ACTIVATIONS table: every entry is a
+    source-preserving unary function."""
+
+    def __getitem__(self, _key: Any) -> Callable:
+        return _generic_fn
+
+
+# ------------------------------------------------------------- trace driver
+def _unwrap_partial(fn: Callable) -> Tuple[Callable, tuple, dict]:
+    args: tuple = ()
+    kwargs: dict = {}
+    while isinstance(fn, functools.partial):
+        kwargs = {**fn.keywords, **kwargs}
+        args = fn.args + args
+        fn = fn.func
+    return fn, args, kwargs
+
+
+def _with_fake_globals(fn: Callable, overrides: Dict[str, Any]) -> Callable:
+    g = dict(fn.__globals__)
+    g.update(overrides)
+    new = types.FunctionType(fn.__code__, g, fn.__name__, fn.__defaults__,
+                             fn.__closure__)
+    new.__kwdefaults__ = getattr(fn, "__kwdefaults__", None)
+    return new
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTrace:
+    """The abstract execution of one launch: the plan's refs + their events."""
+
+    grid: Tuple[int, ...]
+    ref_kinds: Dict[str, str]               # name -> "in" | "out" | "scratch"
+    events: Tuple[Event, ...]
+
+    def ref_events(self, name: str) -> Tuple[Event, ...]:
+        return tuple(e for e in self.events if e.ref == name)
+
+    def structure_key(self) -> tuple:
+        """Grid-size-independent shape of the trace, with guard values
+        normalized to first/last roles — equal keys mean the same abstract
+        dataflow, so one analysis transfers across candidate grids."""
+        def norm(p: Pred) -> tuple:
+            g = self.grid[p.axis]
+            if p.value == 0:
+                role = "first"
+            elif p.value == g - 1:
+                role = "last"
+            else:
+                role = f"@{p.value}"
+            return (p.axis, role)
+        return tuple((e.ref, e.kind, tuple(norm(p) for p in e.guard), e.zero,
+                      tuple(sorted(e.sources))) for e in self.events)
+
+
+def trace_launch(plan: Any) -> KernelTrace:
+    """Abstractly execute ``plan.body`` and record the Ref access events.
+    Raises `UntraceableKernel` for bodies outside the supported fragment."""
+    tracer = _Tracer()
+    fakes: Dict[str, Any] = {
+        "jnp": _FakeJnp(),
+        "jax": _FakeJax(),
+        "pl": _FakePl(tracer),
+        "pltpu": _FakeModule(),
+        "ACTIVATIONS": _AnyActivations(),
+    }
+    fn, args, kwargs = _unwrap_partial(plan.body)
+    body = _with_fake_globals(fn, fakes)
+    refs: List[TraceRef] = []
+    kinds: Dict[str, str] = {}
+    for op in plan.inputs:
+        refs.append(TraceRef(tracer, op.name, tuple(op.block_shape), "in"))
+        kinds[op.name] = "in"
+    for op in plan.outputs:
+        refs.append(TraceRef(tracer, op.name, tuple(op.block_shape), "out"))
+        kinds[op.name] = "out"
+    for s in plan.scratch:
+        refs.append(TraceRef(tracer, s.name, tuple(s.shape), "scratch"))
+        kinds[s.name] = "scratch"
+    try:
+        body(*args, *refs, **kwargs)
+    except UntraceableKernel:
+        raise
+    except Exception as exc:
+        raise UntraceableKernel(f"abstract interpretation of "
+                                f"{fn.__name__} failed: {exc!r}") from exc
+    return KernelTrace(grid=tuple(plan.grid), ref_kinds=kinds,
+                       events=tuple(tracer.events))
+
+
+# --------------------------------------------------- BlockSpec index maps
+Dep = Tuple[str, Optional[int]]     # ("axis", a) | ("const", c) | ("other", None)
+
+
+def visit_structure(index_map: Callable, grid: Sequence[int]) -> Tuple[Dep, ...]:
+    """Classify each block dimension of an index map by probing: identity of
+    one grid axis, a constant, or opaque. Sound for the kernels' projection
+    maps; opaque dims make the dataflow passes fall back to enumeration."""
+    zeros = tuple(0 for _ in grid)
+    base = tuple(index_map(*zeros))
+    deps: List[Dep] = [("const", int(b)) for b in base]
+    for a, g in enumerate(grid):
+        probes = sorted({1, g - 1} & set(range(1, g)))
+        for c in probes:
+            pt = list(zeros)
+            pt[a] = c
+            out = tuple(index_map(*pt))
+            for d in range(len(base)):
+                if out[d] == base[d]:
+                    continue
+                if out[d] == c and base[d] == 0 and deps[d] in (
+                        ("const", 0), ("axis", a)):
+                    deps[d] = ("axis", a)
+                else:
+                    deps[d] = ("other", None)
+    return tuple(deps)
+
+
+def visit_axes(deps: Sequence[Dep]) -> frozenset:
+    """Grid axes an operand's block index depends on."""
+    return frozenset(a for kind, a in deps if kind == "axis")
+
+
+def fetch_runs(axes: frozenset, grid: Sequence[int]) -> int:
+    """Block transfers for an operand whose index depends on ``axes``, under
+    lexicographic grid order (last axis fastest) with revisit elision: a new
+    transfer starts exactly when the block index changes between consecutive
+    steps, i.e. once per distinct prefix up to the innermost *effective*
+    visited axis."""
+    active = [a for a in axes if grid[a] > 1]
+    if not active:
+        return 1
+    runs = 1
+    for a in range(max(active) + 1):
+        runs *= grid[a]
+    return runs
+
+
+def per_block_fetches(axes: frozenset, grid: Sequence[int]) -> int:
+    """``fetch_runs`` normalized per distinct block: uniform across blocks
+    for projection maps (transfers divide evenly)."""
+    blocks = 1
+    for a in axes:
+        blocks *= grid[a]
+    runs = fetch_runs(axes, grid)
+    assert runs % blocks == 0, (axes, tuple(grid), runs, blocks)
+    return runs // blocks

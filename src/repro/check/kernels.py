@@ -21,7 +21,7 @@ import dataclasses
 import itertools
 from typing import Any, Callable, List, Mapping, Optional, Sequence, Tuple
 
-from repro.check.diagnostics import Diagnostic, raise_on_error
+from repro.check.diagnostics import Diagnostic, errors, raise_on_error
 from repro.plan.gemm_model import VMEM_BYTES
 from repro.plan.graph import NetworkGraph
 from repro.plan.schedule import Schedule
@@ -243,6 +243,76 @@ def check_matmul_launch(m: int, k: int, n: int, schedule: Schedule,
     return check_launch(launch, vmem_budget)
 
 
+# --------------------------------------------------------- flash_attention
+def flash_launch(bh: int, sq: int, skv: int, d: int, bq: int = 128,
+                 bk: int = 128, q_offset: int = 0,
+                 subject: str = "flash_attention",
+                 elem_bytes: int = 4) -> LaunchSpec:
+    """Re-derive `flash_attention`'s launch for q (BH, Sq, D), k/v (BH, Skv,
+    D) — same block clamping and sequence padding the kernel applies."""
+    bq = max(1, min(bq, sq))
+    bk = max(1, min(bk, skv))
+    sq_p = sq + (-sq) % bq
+    skv_p = skv + (-skv) % bk
+    gq = sq_p // bq
+    gk = skv_p // bk
+    return LaunchSpec(
+        subject=subject,
+        grid=(bh, gq, gk),
+        operands=(
+            OperandSpec("q", (bh, sq_p, d), (1, bq, d),
+                        lambda b, iq, ik: (b, iq, 0), elem_bytes),
+            OperandSpec("k", (bh, skv_p, d), (1, bk, d),
+                        lambda b, iq, ik: (b, ik, 0), elem_bytes),
+            OperandSpec("v", (bh, skv_p, d), (1, bk, d),
+                        lambda b, iq, ik: (b, ik, 0), elem_bytes),
+            OperandSpec("out", (bh, sq_p, d), (1, bq, d),
+                        lambda b, iq, ik: (b, iq, 0), elem_bytes),
+        ),
+        scratch_bytes=(bq * d + 2 * bq) * 4,   # fp32 acc + running (m, l)
+    )
+
+
+def check_flash_launch(bh: int, sq: int, skv: int, d: int, bq: int = 128,
+                       bk: int = 128, causal: bool = True, q_offset: int = 0,
+                       subject: str = "flash_attention",
+                       vmem_budget: Optional[int] = None) -> List[Diagnostic]:
+    """Pre-flight one attention launch: geometry (RPC030-032) plus the one
+    semantic hazard BlockSpecs can't express — zero-padded kv keys are only
+    maskable inside the kernel when causal; non-causal padded kv would let
+    padded keys contribute exp(0) softmax weight (RPC031)."""
+    out: List[Diagnostic] = []
+    if min(bh, sq, skv, d) < 1:
+        out.append(Diagnostic(
+            "RPC031", subject,
+            f"degenerate attention shape bh={bh} sq={sq} skv={skv} d={d}"))
+        return out
+    bk_eff = max(1, min(bk, skv))
+    if skv % bk_eff and not causal:
+        out.append(Diagnostic(
+            "RPC031", subject,
+            f"skv={skv} is not a multiple of bk={bk_eff} and causal=False: "
+            f"the kernel masks padded keys via the causal id lattice only; "
+            f"pad kv to a block multiple or use causal masking"))
+    if causal and q_offset < 0:
+        out.append(Diagnostic(
+            "RPC031", subject,
+            f"negative q_offset={q_offset} puts query ids before key id 0"))
+    launch = flash_launch(bh, sq, skv, d, bq, bk, q_offset, subject)
+    return out + check_launch(launch, vmem_budget)
+
+
+def preflight_flash_launch(bh: int, sq: int, skv: int, d: int, bq: int = 128,
+                           bk: int = 128, causal: bool = True,
+                           q_offset: int = 0,
+                           vmem_budget: Optional[int] = None) -> None:
+    """The gate `flash_attention` calls before building its plan: raises
+    `CheckError` on any RPC03x error, compiles nothing."""
+    raise_on_error(check_flash_launch(bh, sq, skv, d, bq, bk, causal,
+                                      q_offset, vmem_budget=vmem_budget),
+                   context="flash_attention pre-flight failed")
+
+
 # ------------------------------------------------------- whole-network gate
 def check_network_kernels(graph: NetworkGraph, schedules: Any,
                           params: Optional[Mapping[str, object]] = None,
@@ -286,9 +356,18 @@ def check_network_kernels(graph: NetworkGraph, schedules: Any,
 
 def preflight_network_kernels(graph: NetworkGraph, schedules: Any,
                               params: Optional[Mapping[str, object]] = None,
-                              vmem_budget: Optional[int] = None) -> None:
+                              vmem_budget: Optional[int] = None,
+                              dataflow: bool = True) -> None:
     """The gate `run_network_kernels` calls before any pallas_call: raises
-    `CheckError` listing every RPC03x error, compiles nothing."""
-    raise_on_error(check_network_kernels(graph, schedules, params,
-                                         vmem_budget),
-                   context="kernel pre-flight failed")
+    `CheckError` listing every RPC03x/RPC04x error, compiles nothing.
+
+    With ``dataflow`` (the default) every node's launch is also traced by
+    `repro.check.dataflow` — race/coverage/accumulation proofs plus the
+    eq (2)/(3) word-count equivalence — cached per launch geometry, so the
+    added cost across a whole zoo is a handful of traces.
+    """
+    found = check_network_kernels(graph, schedules, params, vmem_budget)
+    if dataflow and not errors(found):
+        from repro.check.dataflow import check_network_dataflow
+        found += check_network_dataflow(graph, schedules)
+    raise_on_error(found, context="kernel pre-flight failed")

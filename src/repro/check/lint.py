@@ -13,6 +13,9 @@ The verifier (layer 1) proves individual IR objects; this layer proves the
   * RPL102 — a ``*_words`` name must never be assigned straight from a
     ``*_bytes`` name (or vice versa): that is a unit error the type system
     cannot see.
+  * RPL103 — ``pl.pallas_call`` is invoked in exactly one place
+    (``repro.kernels.launch.run``): every kernel goes through a `LaunchPlan`
+    so the RPC04x dataflow analyzer certifies the launch that actually runs.
   * RPL110 — the pre-`repro.plan` shims (``repro.core.bwmodel``,
     ``repro.core.partitioner``) are deprecated import surfaces.
 
@@ -52,6 +55,10 @@ BYTE_MODEL_MODULES = (
 )
 
 ENERGY_CONSTANT_HOME = ("src/repro/roofline/constants.py",)
+
+#: the only package that may call pl.pallas_call — everything else goes
+#: through a LaunchPlan so the dataflow analyzer sees the launch that runs
+KERNEL_LAUNCH_HOME = ("src/repro/kernels/*",)
 
 DEPRECATED_MODULES = ("repro.core.bwmodel", "repro.core.partitioner")
 DEPRECATED_IMPORT_OK = ("src/repro/core/*",)
@@ -171,6 +178,24 @@ def cross_assign_rule() -> LintRule:
     return LintRule("RPL102", _visit_cross_assign)
 
 
+# --------------------------------------------------------------- RPL103
+def _visit_raw_pallas(tree: ast.Module, rel: str) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _name_of(node.func) == "pallas_call":
+            out.append(Diagnostic(
+                "RPL103", rel,
+                "pl.pallas_call outside repro.kernels bypasses the "
+                "LaunchPlan the dataflow analyzer (RPC04x) certifies",
+                file=rel, line=node.lineno))
+    return out
+
+
+def raw_pallas_rule(
+        allowed: Sequence[str] = KERNEL_LAUNCH_HOME) -> LintRule:
+    return LintRule("RPL103", _visit_raw_pallas, tuple(allowed))
+
+
 # --------------------------------------------------------------- RPL110
 def _visit_deprecated_import(tree: ast.Module, rel: str) -> List[Diagnostic]:
     out: List[Diagnostic] = []
@@ -202,7 +227,7 @@ def deprecated_import_rule(
 
 def default_rules() -> List[LintRule]:
     return [raw_byte_arith_rule(), magic_energy_rule(), cross_assign_rule(),
-            deprecated_import_rule()]
+            raw_pallas_rule(), deprecated_import_rule()]
 
 
 # ----------------------------------------------------------------- driver

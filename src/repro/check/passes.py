@@ -386,6 +386,9 @@ def check(obj: object, budget: Optional[int] = None) -> List[Diagnostic]:
     if isinstance(obj, tuple) and len(obj) == 2 \
             and isinstance(obj[1], Schedule):
         return check_schedule(obj[0], obj[1], budget)
+    if hasattr(obj, "grid") and hasattr(obj, "body"):   # a kernels.LaunchPlan
+        from repro.check.dataflow import analyze_launch
+        return analyze_launch(obj)[0]
     raise TypeError(f"repro.check cannot verify {type(obj).__name__}")
 
 

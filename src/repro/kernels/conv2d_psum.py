@@ -23,10 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
-
+from repro.kernels import launch
 from repro.kernels.psum_matmul import ACTIVATIONS
 
 
@@ -65,6 +63,39 @@ def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kk: int, stride: int,
         o_ref[...] = ACTIVATIONS[act](acc_ref[...]).reshape(n, ho, wo).astype(o_ref.dtype)
 
 
+def conv_launch_plan(*, cin: int, hp: int, wp: int, cout: int, kk: int,
+                     stride: int = 1, block_m: int = 32, block_n: int = 32,
+                     act: str = "none", dtype=None) -> launch.LaunchPlan:
+    """The launch `conv2d_psum` executes, from plain integers — same clamping
+    and channel padding the entry point applies, checkable without arrays."""
+    ho = (hp - kk) // stride + 1
+    wo = (wp - kk) // stride + 1
+    bm = max(1, min(block_m, cin))
+    bn = max(1, min(block_n, cout))
+    cin_p = cin + (-cin) % bm
+    cout_p = cout + (-cout) % bn
+    n_co = cout_p // bn
+    n_ci = cin_p // bm
+    return launch.LaunchPlan(
+        name="conv2d_psum",
+        grid=(n_co, n_ci),
+        body=functools.partial(_conv_kernel, kk=kk, stride=stride, act=act,
+                               n_ci=n_ci),
+        inputs=(
+            launch.OperandPlan("x", (cin_p, hp, wp), (bm, hp, wp),
+                               lambda co, ci: (ci, 0, 0)),
+            launch.OperandPlan("w", (cout_p, cin_p, kk, kk), (bn, bm, kk, kk),
+                               lambda co, ci: (co, ci, 0, 0)),
+        ),
+        outputs=(
+            launch.OperandPlan("out", (cout_p, ho, wo), (bn, ho, wo),
+                               lambda co, ci: (co, 0, 0), dtype=dtype),
+        ),
+        scratch=(launch.ScratchPlan("acc", (bn, ho * wo), jnp.float32),),
+        dimension_semantics=("parallel", "arbitrary"),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("schedule", "block_m", "block_n",
                                              "stride", "act", "interpret"))
 def conv2d_psum(x: jax.Array, w: jax.Array, *, schedule=None, block_m: int = 32,
@@ -81,34 +112,16 @@ def conv2d_psum(x: jax.Array, w: jax.Array, *, schedule=None, block_m: int = 32,
     cin, hp, wp = x.shape
     cout, cin2, kk, _ = w.shape
     assert cin == cin2
-    ho = (hp - kk) // stride + 1
-    wo = (wp - kk) // stride + 1
-    bm = min(block_m, cin)
-    bn = min(block_n, cout)
+    plan = conv_launch_plan(cin=cin, hp=hp, wp=wp, cout=cout, kk=kk,
+                            stride=stride, block_m=block_m, block_n=block_n,
+                            act=act, dtype=x.dtype)
     # pad channels to block multiples (zero channels contribute zero psums)
-    pc_in = (-cin) % bm
-    pc_out = (-cout) % bn
-    if pc_in:
-        x = jnp.pad(x, ((0, pc_in), (0, 0), (0, 0)))
-        w = jnp.pad(w, ((0, 0), (0, pc_in), (0, 0), (0, 0)))
-    if pc_out:
-        w = jnp.pad(w, ((0, pc_out), (0, 0), (0, 0), (0, 0)))
-    n_co = w.shape[0] // bn
-    n_ci = x.shape[0] // bm
-
-    out = pl.pallas_call(
-        functools.partial(_conv_kernel, kk=kk, stride=stride, act=act,
-                          n_ci=n_ci),
-        grid=(n_co, n_ci),
-        in_specs=[
-            pl.BlockSpec((bm, hp, wp), lambda co, ci: (ci, 0, 0)),
-            pl.BlockSpec((bn, bm, kk, kk), lambda co, ci: (co, ci, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bn, ho, wo), lambda co, ci: (co, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((w.shape[0], ho, wo), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bn, ho * wo), jnp.float32)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
-    )(x, w)
+    cin_p = plan.inputs[0].array_shape[0]
+    cout_p = plan.outputs[0].array_shape[0]
+    if cin_p != cin:
+        x = jnp.pad(x, ((0, cin_p - cin), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, cin_p - cin), (0, 0), (0, 0)))
+    if cout_p != cout:
+        w = jnp.pad(w, ((0, cout_p - cout), (0, 0), (0, 0), (0, 0)))
+    out = launch.run(plan, x, w, interpret=interpret)
     return out[:cout]

@@ -34,9 +34,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels import launch
 
 ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
     "none": lambda x: x,
@@ -76,6 +75,54 @@ def _passive_kernel(x_ref, w_ref, o_ref):
                           preferred_element_type=jnp.float32)
 
 
+def matmul_launch_plan(*, m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                       controller: str = "active", act: str = "none",
+                       dtype=None) -> launch.LaunchPlan:
+    """The launch `psum_matmul` executes for one controller, from plain
+    integers — shapes padded to block multiples exactly as the entry pads."""
+    mp = m + (-m) % bm
+    kp = k + (-k) % bk
+    np_ = n + (-n) % bn
+    gm, gn, gk = mp // bm, np_ // bn, kp // bk
+    if controller == "active":
+        return launch.LaunchPlan(
+            name="psum_matmul/active",
+            grid=(gm, gn, gk),
+            body=functools.partial(_active_kernel, act=act, n_k=gk),
+            inputs=(
+                launch.OperandPlan("x", (mp, kp), (bm, bk),
+                                   lambda i, j, kk: (i, kk), elem_bytes=2),
+                launch.OperandPlan("w", (kp, np_), (bk, bn),
+                                   lambda i, j, kk: (kk, j), elem_bytes=2),
+            ),
+            outputs=(
+                launch.OperandPlan("out", (mp, np_), (bm, bn),
+                                   lambda i, j, kk: (i, j), dtype=dtype,
+                                   elem_bytes=2),
+            ),
+            scratch=(launch.ScratchPlan("acc", (bm, bn), jnp.float32),),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+    if controller == "passive":
+        return launch.LaunchPlan(
+            name="psum_matmul/passive",
+            grid=(gk, gm, gn),
+            body=_passive_kernel,
+            inputs=(
+                launch.OperandPlan("x", (mp, kp), (bm, bk),
+                                   lambda kk, i, j: (i, kk), elem_bytes=2),
+                launch.OperandPlan("w", (kp, np_), (bk, bn),
+                                   lambda kk, i, j: (kk, j), elem_bytes=2),
+            ),
+            outputs=(
+                launch.OperandPlan("out", (mp, np_), (bm, bn),
+                                   lambda kk, i, j: (i, j), dtype=jnp.float32),
+            ),
+            dimension_semantics=("arbitrary", "parallel", "parallel"),
+        )
+    raise ValueError(controller)
+
+
 def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
     p0 = (-x.shape[0]) % mult0
     p1 = (-x.shape[1]) % mult1
@@ -110,44 +157,17 @@ def psum_matmul(x: jax.Array, w: jax.Array, *, schedule=None, bm: int = 256,
         out_dtype = x.dtype
     xp = _pad_to(x, bm, bk)
     wp = _pad_to(w, bk, bn)
-    mp, kp = xp.shape
-    np_ = wp.shape[1]
-    gm, gn, gk = mp // bm, np_ // bn, kp // bk
-
+    plan = matmul_launch_plan(m=m, k=k, n=n, bm=bm, bn=bn, bk=bk,
+                              controller=controller, act=act,
+                              dtype=out_dtype if controller == "active"
+                              else None)
     if controller == "active":
-        out = pl.pallas_call(
-            functools.partial(_active_kernel, act=act, n_k=gk),
-            grid=(gm, gn, gk),
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            compiler_params=CompilerParams(
-                dimension_semantics=("parallel", "parallel", "arbitrary")),
-            interpret=interpret,
-        )(xp, wp)
-    elif controller == "passive":
-        psums = pl.pallas_call(
-            _passive_kernel,
-            grid=(gk, gm, gn),
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda kk, i, j: (i, kk)),
-                pl.BlockSpec((bk, bn), lambda kk, i, j: (kk, j)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda kk, i, j: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-            compiler_params=CompilerParams(
-                dimension_semantics=("arbitrary", "parallel", "parallel")),
-            interpret=interpret,
-        )(xp, wp)
+        out = launch.run(plan, xp, wp, interpret=interpret)
+    else:
+        psums = launch.run(plan, xp, wp, interpret=interpret)
         # Passive engines apply the activation after reading the final psums
         # back — an extra HBM round-trip the active schedule fuses away.
         out = ACTIVATIONS[act](psums).astype(out_dtype)
-    else:
-        raise ValueError(controller)
     return out[:m, :n]
 
 

@@ -32,7 +32,8 @@ from repro.plan.api import (DEFAULT_P_MACS, Plan, clear_plan_cache,
                             plan_cache_info, plan_many)
 from repro.plan.conv_model import optimal_m_realvalued
 from repro.plan.dse import (Constraint, SearchResult, StrategySpec,
-                            register_strategy, unregister_strategy)
+                            certify_space, register_strategy,
+                            unregister_strategy)
 from repro.plan.gemm_model import (DEFAULT_VMEM_BUDGET, LANE, SUBLANE,
                                    VMEM_BYTES, MatmulBlocks)
 from repro.plan.objectives import (OBJECTIVES, Objective, get_objective,
@@ -57,7 +58,7 @@ __all__ = [
     "transformer_matmuls", "optimal_m_realvalued",
     # --- design-space exploration (repro.plan.dse) ---
     "dse", "objectives", "space",
-    "Constraint", "SearchResult", "StrategySpec",
+    "Constraint", "SearchResult", "StrategySpec", "certify_space",
     "register_strategy", "unregister_strategy",
     "OBJECTIVES", "Objective", "get_objective", "register_objective",
     "Candidates", "SearchSpace",

@@ -43,7 +43,7 @@ __all__ = [
     "Constraint", "MacBudget", "VmemBudget", "LaneAligned", "GroupDivisible",
     "StrategySpec", "SearchResult", "search", "plan_with_strategy",
     "strategy_spec", "register_strategy", "unregister_strategy",
-    "sweep", "pareto", "register_objective", "get_objective",
+    "sweep", "pareto", "certify_space", "register_objective", "get_objective",
     "SearchSpace", "Candidates", "ConvExactSpace", "ConvGridSpace",
     "AlignedBlockSpace", "ClosedFormSpace", "Objective",
 ]
@@ -382,6 +382,20 @@ def sweep(networks, budgets, strategies=("paper_opt",),
                         rows.append({**base, "cost": float(sum(costs)),
                                      "n_layers": len(plans), **totals})
     return rows
+
+
+def certify_space(workload: Workload, budget: int | None = None, *,
+                  controller="passive", space: "SearchSpace | None" = None):
+    """Statically certify every candidate this module would search over:
+    delegates to `repro.check.dataflow`, which traces the matching Pallas
+    kernel once per grid-degeneracy class and proves the vectorized word
+    counts equal the analytical model for the whole space. Returns a
+    `repro.check.dataflow.SpaceCertificate` (``.ok``, per-candidate
+    equal/bounded HBM tallies, diagnostics)."""
+    from repro.check.dataflow import certify_conv_space, certify_matmul_space
+    if isinstance(workload, ConvWorkload):
+        return certify_conv_space(workload, budget, controller, space)
+    return certify_matmul_space(workload, budget, controller, space)
 
 
 def pareto(rows, x: str = "budget", y: str = "cost") -> list[dict]:

@@ -33,6 +33,7 @@ evaluator traces to one fused array program.
 from __future__ import annotations
 
 from functools import cached_property
+from typing import Any, Callable
 
 import numpy as np
 
@@ -45,8 +46,12 @@ from repro.sim.params import DEFAULT_PARAMS, SimParams
 
 __all__ = ["BatchSimResult", "simulate_batch"]
 
+#: a numpy or jax.numpy array — the evaluator is xp-generic by design
+Array = Any
 
-def _fetch_side(params: SimParams, fetch_bytes, xp):
+
+def _fetch_side(params: SimParams, fetch_bytes: Array,
+                xp: Any) -> tuple[Array, Array, Array]:
     """(fetch cycles, bursts, rows): `engine._dram_cycles` + the bus-in
     bound, elementwise. ``fetch_bytes <= 0`` yields all zeros, exactly as the
     scalar early-out does."""
@@ -74,7 +79,8 @@ class BatchSimResult:
     """
 
     def __init__(self, kind: str, controller: Controller, params: SimParams,
-                 xp, epochs: dict, totals_fn, fill_row: int):
+                 xp: Any, epochs: dict, totals_fn: Callable[[], dict],
+                 fill_row: int) -> None:
         self.kind = kind
         self.controller = controller
         self.params = params
@@ -94,12 +100,12 @@ class BatchSimResult:
 
     # ------------------------------------------------- epoch-matrix pieces
     @cached_property
-    def _fetch(self):
+    def _fetch(self) -> tuple[Array, Array, Array]:
         """(fetch cycles, bursts, rows) of the slot matrix's DMA side."""
         return _fetch_side(self.params, self._e["fetch_bytes"], self._xp)
 
     @cached_property
-    def _phase_cycles(self):
+    def _phase_cycles(self) -> Array:
         """`engine._epoch_phase` timing over the slot matrix: per-slot
         ``per_epoch * count`` cycles (a zero-count slot is a phase the scalar
         walk simply does not have)."""
@@ -120,7 +126,7 @@ class BatchSimResult:
 
     # ------------------------------------------------------ time / bandwidth
     @cached_property
-    def cycles(self):
+    def cycles(self) -> Array:
         cycles = self._phase_cycles.sum(axis=0)
         if self.params.dma_double_buffer:
             # `engine._fill_phase`: the un-overlapped first fetch of the
@@ -132,11 +138,11 @@ class BatchSimResult:
         return cycles
 
     @property
-    def latency_s(self):
+    def latency_s(self) -> Array:
         return self.cycles * self.params.cycle_s
 
     @cached_property
-    def peak_words_per_cycle(self):
+    def peak_words_per_cycle(self) -> Array:
         """Max per-phase bus rate. The scalar report divides each phase's
         word total by its cycle total, so mirror that exact quotient."""
         xp, e = self._xp, self._e
@@ -146,7 +152,7 @@ class BatchSimResult:
         return xp.where(phase_cycles > 0, phase_words / safe, 0.0).max(axis=0)
 
     @property
-    def peak_bw_bytes_s(self):
+    def peak_bw_bytes_s(self) -> Array:
         xp = self._xp
         words = xp.where(self.interconnect_words > 0,
                          self.interconnect_words, 1.0)
@@ -156,24 +162,24 @@ class BatchSimResult:
                 * self.params.clock_ghz * 1e9)
 
     @property
-    def avg_bw_bytes_s(self):
+    def avg_bw_bytes_s(self) -> Array:
         xp = self._xp
         lat = xp.where(self.cycles > 0, self.latency_s, 1.0)
         return xp.where(self.cycles > 0, self.interconnect_bytes / lat, 0.0)
 
     # ------------------------------------------------- second-order counters
     @cached_property
-    def row_hits(self):
+    def row_hits(self) -> Array:
         _, bursts, rows = self._fetch
         return ((bursts - rows) * self._e["count"]).sum(axis=0).astype(np.int64)
 
     @cached_property
-    def row_misses(self):
+    def row_misses(self) -> Array:
         _, _, rows = self._fetch
         return (rows * self._e["count"]).sum(axis=0).astype(np.int64)
 
     @cached_property
-    def bank_conflicts(self):
+    def bank_conflicts(self) -> Array:
         if self.params.sram.ports_per_bank >= 2:
             return np.zeros(len(self), dtype=np.int64)
         xp, e = self._xp, self._e
@@ -181,44 +187,44 @@ class BatchSimResult:
         return (rmw * e["count"]).sum(axis=0).astype(np.int64)
 
     @property
-    def row_miss_rate(self):
+    def row_miss_rate(self) -> Array:
         total = self.row_hits + self.row_misses
         return np.where(total > 0,
                         self.row_misses / np.where(total > 0, total, 1), 0.0)
 
     # ------------------- first-order totals (exact; == the analytical model)
     @cached_property
-    def input_words(self):
+    def input_words(self) -> Array:
         return self._xp.asarray(self._totals["input_words"], dtype=np.float64)
 
     @cached_property
-    def output_words(self):
+    def output_words(self) -> Array:
         return self._xp.asarray(self._totals["output_words"],
                                 dtype=np.float64)
 
     @cached_property
-    def interconnect_words(self):
+    def interconnect_words(self) -> Array:
         return self.input_words + self.output_words
 
     @cached_property
-    def sram_reads(self):
+    def sram_reads(self) -> Array:
         return self._xp.asarray(self._totals["sram_reads"], dtype=np.float64)
 
     @cached_property
-    def sram_writes(self):
+    def sram_writes(self) -> Array:
         return self._xp.asarray(self._totals["sram_writes"], dtype=np.float64)
 
     @cached_property
-    def interconnect_bytes(self):
+    def interconnect_bytes(self) -> Array:
         return self._xp.asarray(self._totals["interconnect_bytes"],
                                 dtype=np.float64)
 
     @cached_property
-    def dram_words(self):
+    def dram_words(self) -> Array:
         return self._xp.asarray(self._totals["dram_words"], dtype=np.float64)
 
     @cached_property
-    def dram_bytes(self):
+    def dram_bytes(self) -> Array:
         return self._xp.asarray(self._totals["dram_bytes"], dtype=np.float64)
 
     # ----------------------------------------------------------------- energy
@@ -236,7 +242,7 @@ class BatchSimResult:
         }
 
     @cached_property
-    def energy_pj(self):
+    def energy_pj(self) -> Array:
         # sum(dict.values()) order of `SimReport.energy_pj`: left-associated
         # interconnect + sram + dram_bytes + dram_row_act.
         b = self.energy_breakdown
@@ -244,7 +250,7 @@ class BatchSimResult:
                 + b["dram_row_act"])
 
     # ------------------------------------------------------------------ views
-    def metric(self, name: str):
+    def metric(self, name: str) -> Array:
         """The per-candidate column for any `SimReport` metric name (e.g.
         ``latency_s``, ``energy_pj``, ``interconnect_words``)."""
         try:
@@ -257,7 +263,8 @@ class BatchSimResult:
 
 
 def _conv_slots(wl: ConvWorkload, cands: Candidates, active: bool,
-                spilled: int, out_spilled: bool, xp):
+                spilled: int, out_spilled: bool, xp: Any
+                ) -> tuple[dict, Callable[[], dict], int]:
     """Vectorized `engine._conv_epochs` + `engine._conv_totals`: the epoch
     slot matrix, the exact totals, and the fill-phase fetch bytes."""
     g = wl.groups
@@ -336,7 +343,8 @@ _K_SLOTS = ("only", "first", "mid", "last")
 
 
 def _gemm_slots(wl: MatmulWorkload, cands: Candidates, active: bool,
-                spilled: int, out_spilled: bool, xp):
+                spilled: int, out_spilled: bool, xp: Any
+                ) -> tuple[dict, Callable[[], dict], int]:
     """Vectorized `engine._gemm_epochs` + `engine._gemm_totals`."""
     bm = np.asarray(cands.bm, dtype=np.int64)
     bn = np.asarray(cands.bn, dtype=np.int64)
@@ -432,7 +440,7 @@ def simulate_batch(workload: Workload, cands: Candidates,
                    params: SimParams | None = None, *,
                    spilled_in_words: int | None = None,
                    out_spilled: bool = True,
-                   xp=np) -> BatchSimResult:
+                   xp: Any = np) -> BatchSimResult:
     """Simulate every candidate schedule of a grid in one array pass.
 
     The batched analogue of ``engine.simulate``: ``cands`` supplies the block

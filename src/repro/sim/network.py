@@ -16,10 +16,12 @@ per-phase timelines chain in topological order.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 from repro.plan.graph import NetworkGraph
 from repro.plan.netplan import NetPlan
 from repro.plan.schedule import Controller, Schedule
+from repro.plan.workload import Workload
 from repro.sim.engine import simulate
 from repro.sim.params import DEFAULT_PARAMS, SimParams
 from repro.sim.report import SimReport, merge_reports
@@ -34,13 +36,13 @@ __all__ = ["simulate_network", "node_report_cache_info",
 # controller comparisons, netplan baselines) hit the same node reports
 # instead of re-walking the epoch classes.
 @functools.lru_cache(maxsize=4096)
-def _node_report(workload, schedule: Schedule, params: SimParams,
+def _node_report(workload: Workload, schedule: Schedule, params: SimParams,
                  spilled: int, out_spilled: bool, name: str) -> SimReport:
     return simulate(workload, schedule, params, spilled_in_words=spilled,
                     out_spilled=out_spilled, name=name)
 
 
-def node_report_cache_info():
+def node_report_cache_info() -> Any:
     return _node_report.cache_info()
 
 
@@ -50,7 +52,7 @@ def clear_node_report_cache() -> None:
 
 def simulate_network(plan_or_graph: "NetPlan | NetworkGraph",
                      schedules: dict[str, Schedule] | None = None,
-                     resident=frozenset(),
+                     resident: frozenset[str] = frozenset(),
                      params: SimParams | None = None) -> SimReport:
     """Simulate a planned network.
 

@@ -28,6 +28,8 @@ work without an explicit import.
 
 from __future__ import annotations
 
+from typing import Callable
+
 import numpy as np
 
 from repro.plan import dse
@@ -55,7 +57,7 @@ class SimObjective:
     """
 
     def __init__(self, metric: str, params: SimParams | None = None,
-                 name: str | None = None):
+                 name: str | None = None) -> None:
         self.metric = metric
         self.params = DEFAULT_PARAMS if params is None else params
         self.__name__ = f"sim_{metric}" if name is None else name
@@ -85,7 +87,9 @@ def make_sim_objective(metric: str,
     return SimObjective(metric, params)
 
 
-def scalar_sim_objective(metric: str, params: SimParams | None = None):
+def scalar_sim_objective(
+        metric: str, params: SimParams | None = None
+) -> Callable[[Workload, Candidates, Controller], np.ndarray]:
     """The pre-batch per-candidate ``simulate()`` loop, kept frozen as the
     parity oracle for the batch evaluator's tests and as the baseline the
     ``BENCH_sim.json`` ``dse/sim_speedup`` rows measure against. Do not

@@ -38,7 +38,7 @@ class DramParams:
     t_burst: int = 4            # engine cycles a burst occupies the channel
     t_row_miss: int = 40        # extra cycles per row activation (tRP + tRCD)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.burst_bytes < 1 or self.row_bytes < self.burst_bytes:
             raise ValueError(f"need row_bytes >= burst_bytes >= 1, got {self}")
 
@@ -74,7 +74,7 @@ class SimParams:
     clock_ghz: float = 1.0
     dma_double_buffer: bool = True   # prefetch next input block during compute
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.bus_bytes_per_cycle < 1 or self.macs_per_cycle < 1:
             raise ValueError(f"non-positive throughput in {self}")
         if self.clock_ghz <= 0:

@@ -396,7 +396,8 @@ def test_repo_is_lint_clean():
 
 def test_lint_rules_load_from_tools():
     rules = rlint.load_rules()
-    assert {r.code for r in rules} == {"RPL100", "RPL101", "RPL102", "RPL110"}
+    assert {r.code for r in rules} == {"RPL100", "RPL101", "RPL102",
+                                       "RPL103", "RPL110"}
 
 
 # ------------------------------------------------ latent-violation pin

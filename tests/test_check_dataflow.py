@@ -1,0 +1,471 @@
+"""Tests for `repro.check.dataflow` — the kernel-body dataflow analyzer.
+
+Covers: the structural passes (RPC040-046) each rejecting one deliberately
+corrupted synthetic `LaunchPlan` (built jax-free from duck-typed plan
+records), the real kernels' scalar reports proving clean for both
+controllers (including non-dividing blocks and the flash decode geometry),
+a traffic-mismatch (RPC045) injected by tampering the matmul launch body,
+and the space-level certificates: every candidate a `ConvExactSpace` /
+`AlignedBlockSpace` admits certifies against the analytical model — pinned
+on zoo layers and as a hypothesis property over random valid workloads.
+"""
+
+import dataclasses
+import functools
+
+import pytest
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:   # optional dep: fall back to the vendored stub
+    from _hypothesis_stub import given, settings, st
+
+import repro.check as rc
+from repro import plan
+from repro.check.diagnostics import CODES, Severity
+from repro.plan.schedule import Controller, Schedule
+from repro.plan.workload import ConvWorkload, MatmulWorkload
+
+# The tracer rebuilds kernel bodies with fake `pl`/`jnp` modules substituted
+# for these globals — the placeholders are never executed, so the synthetic
+# corruption plans below stay jax-free.
+pl = None
+jnp = None
+
+
+def _codes(diags):
+    return {d.code for d in diags}
+
+
+def _msgs(diags, code):
+    return [d.message for d in diags if d.code == code]
+
+
+# ------------------------------------------------ synthetic launch plans
+@dataclasses.dataclass(frozen=True)
+class _Op:
+    name: str
+    array_shape: tuple
+    block_shape: tuple
+    index_map: object
+
+
+@dataclasses.dataclass(frozen=True)
+class _Scratch:
+    name: str
+    shape: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class _Plan:
+    """Duck-typed stand-in for `repro.kernels.launch.LaunchPlan` (same
+    fields the analyzer reads) so corruption tests never import jax."""
+
+    name: str
+    grid: tuple
+    body: object
+    inputs: tuple
+    outputs: tuple
+    scratch: tuple = ()
+    dimension_semantics: tuple = ()
+    input_output_aliases: tuple = ()
+
+    @property
+    def operands(self):
+        return self.inputs + self.outputs
+
+
+_GM, _GN, _GK = 2, 2, 3
+_BM, _BN, _BK = 8, 8, 4
+
+
+def _good_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(k == n_k - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def _matmul_plan(body=None, out_map=None,
+                 semantics=("parallel", "parallel", "arbitrary"),
+                 aliases=()):
+    return _Plan(
+        name="synthetic_matmul",
+        grid=(_GM, _GN, _GK),
+        body=functools.partial(body or _good_body, n_k=_GK),
+        inputs=(
+            _Op("x", (_GM * _BM, _GK * _BK), (_BM, _BK),
+                lambda i, j, k: (i, k)),
+            _Op("w", (_GK * _BK, _GN * _BN), (_BK, _BN),
+                lambda i, j, k: (k, j)),
+        ),
+        outputs=(
+            _Op("out", (_GM * _BM, _GN * _BN), (_BM, _BN),
+                out_map or (lambda i, j, k: (i, j))),
+        ),
+        scratch=(_Scratch("acc", (_BM, _BN)),),
+        dimension_semantics=semantics,
+        input_output_aliases=aliases,
+    )
+
+
+# ---------------------------------------------------------------- registry
+def test_dataflow_codes_registered():
+    for code in ["RPC040", "RPC041", "RPC042", "RPC043", "RPC044",
+                 "RPC045", "RPC046"]:
+        assert code in CODES
+        assert CODES[code].summary and CODES[code].hint
+    assert rc.Diagnostic("RPC040", "t", "x").severity is Severity.ERROR
+    assert rc.Diagnostic("RPC045", "t", "x").severity is Severity.ERROR
+    assert rc.Diagnostic("RPC046", "t", "x").severity is Severity.WARNING
+
+
+# --------------------------------------------- structural passes, per code
+def test_synthetic_clean_plan_has_no_diagnostics():
+    diags, ana = rc.analyze_launch(_matmul_plan())
+    assert diags == []
+    assert ana is not None and tuple(ana.grid) == (_GM, _GN, _GK)
+
+
+def test_rpc040_write_write_race():
+    # Output map drops parallel axis 1 and no store guard pins it: two
+    # parallel grid steps may store the same block.
+    diags, _ = rc.analyze_launch(_matmul_plan(out_map=lambda i, j, k: (i, 0)))
+    assert "RPC040" in _codes(diags)
+
+
+def _no_init_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def test_rpc041_read_before_initialize():
+    diags, _ = rc.analyze_launch(_matmul_plan(body=_no_init_body))
+    assert "RPC041" in _codes(diags)
+
+
+def _partial_drain_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(pl.program_id(0) == 0)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def test_rpc042_incomplete_output_coverage():
+    # The drain only fires at i == 0: every block with i > 0 is never written.
+    diags, _ = rc.analyze_launch(_matmul_plan(body=_partial_drain_body))
+    assert "RPC042" in _codes(diags)
+
+
+def test_rpc042_pinned_output_dim():
+    # Index map pins dim 1 to block 0 while the array has _GN blocks there.
+    diags, _ = rc.analyze_launch(_matmul_plan(out_map=lambda i, j, k: (i, 0)))
+    assert any("pinned" in m for m in _msgs(diags, "RPC042"))
+
+
+def _guarded_rmw_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _acc():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def test_rpc043_guarded_accumulation():
+    diags, _ = rc.analyze_launch(_matmul_plan(body=_guarded_rmw_body))
+    assert any("read-modify-write" in m for m in _msgs(diags, "RPC043"))
+
+
+def _midchain_zero_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    @pl.when(pl.program_id(2) == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def test_rpc043_zero_fill_mid_chain():
+    diags, _ = rc.analyze_launch(_matmul_plan(body=_midchain_zero_body))
+    assert any("zero-fill" in m for m in _msgs(diags, "RPC043"))
+
+
+def _early_drain_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(pl.program_id(2) == 0)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def test_rpc043_drain_mid_chain():
+    diags, _ = rc.analyze_launch(_matmul_plan(body=_early_drain_body))
+    assert any("drain store" in m for m in _msgs(diags, "RPC043"))
+
+
+def _store_to_input_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_ref[...] = jnp.zeros_like(x_ref)
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def test_rpc043_store_to_input_operand():
+    diags, _ = rc.analyze_launch(_matmul_plan(body=_store_to_input_body))
+    assert any("input operand" in m for m in _msgs(diags, "RPC043"))
+
+
+def test_rpc043_reduction_axis_not_innermost():
+    p = _matmul_plan(semantics=("arbitrary", "parallel", "parallel"))
+    diags, _ = rc.analyze_launch(p)
+    assert any("innermost" in m for m in _msgs(diags, "RPC043"))
+
+
+def test_rpc044_alias_block_window_mismatch():
+    # x blocks (bm, bk) over (i, k) vs out blocks (bm, bn) over (i, j):
+    # neither the shapes nor the windows agree.
+    diags, _ = rc.analyze_launch(_matmul_plan(aliases=((0, 0),)))
+    assert "RPC044" in _codes(diags)
+
+
+def _untraceable_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    pl.when(True)(lambda: None)
+
+
+def test_rpc046_untraceable_body():
+    diags, ana = rc.analyze_launch(_matmul_plan(body=_untraceable_body))
+    assert _codes(diags) == {"RPC046"}
+    assert ana is None
+    assert rc.errors(diags) == []          # a warning: proofs skipped, not failed
+
+
+# ------------------------------------------- real kernels: scalar reports
+def _conv_wl(cin=64, cout=96, k=3, s=14):
+    return ConvWorkload(name="t", cin=cin, cout=cout, k=k,
+                        wi=s, hi=s, wo=s, ho=s, groups=1)
+
+
+@pytest.mark.parametrize("ctrl", ["passive", "active"])
+def test_conv_dataflow_report_clean(ctrl):
+    wl = _conv_wl()
+    rep = rc.conv_dataflow(wl, plan.plan(wl, controller=ctrl).schedule)
+    assert rep.diagnostics == ()
+    assert rep.ok
+    assert set(rep.words) == {"x", "w", "out"}
+    assert rep.sram_writes > 0
+
+
+@pytest.mark.parametrize("ctrl", ["passive", "active"])
+def test_conv_dataflow_nondividing_blocks(ctrl):
+    # Blocks that divide neither cin nor cout: padded (ghost) words must be
+    # excluded from the real-word proof.
+    wl = _conv_wl()
+    sched = Schedule(kind="conv", bm=7, bn=5, controller=ctrl)
+    rep = rc.conv_dataflow(wl, sched)
+    assert rep.ok and rep.diagnostics == ()
+
+
+def test_conv_dataflow_accumulator_matches_eq3():
+    # Passive B_o charges the full (L, L-1) RMW chain; active only the
+    # writes — the eq (3) vs eq (7) distinction at the accumulator.
+    wl = _conv_wl()
+    sched_p = Schedule(kind="conv", bm=16, bn=32, controller="passive")
+    sched_a = Schedule(kind="conv", bm=16, bn=32, controller="active")
+    rp, ra = rc.conv_dataflow(wl, sched_p), rc.conv_dataflow(wl, sched_a)
+    assert rp.ok and ra.ok
+    # Same launch geometry: identical accumulator event counts either way.
+    assert (rp.sram_writes, rp.sram_reads) == (ra.sram_writes, ra.sram_reads)
+    assert rp.sram_writes == -(-wl.cin // 16) * wl.out_acts
+
+
+@pytest.mark.parametrize("ctrl", ["passive", "active"])
+def test_matmul_dataflow_report_clean(ctrl):
+    wl = MatmulWorkload(m=512, n=256, k=384)
+    p = plan.plan(wl, strategy="exhaustive_vmem", controller=ctrl)
+    rep = rc.matmul_dataflow(wl, p.schedule)
+    assert rep.ok and rep.diagnostics == ()
+
+
+def _double_load_body(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_ref[...]                               # extra load the model never charged
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    @pl.when(k == n_k - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...]
+
+
+def test_rpc045_traffic_proof_failure(monkeypatch):
+    # Tamper the launch the checker traces: an extra x load per step makes
+    # the trace-derived A reads exceed `matmul_traffic`'s charge.
+    import repro.kernels.psum_matmul as pm
+    real = pm.matmul_launch_plan
+
+    def tampered(**kw):
+        built = real(**kw)
+        return dataclasses.replace(
+            built, body=functools.partial(_double_load_body,
+                                          n_k=built.grid[2]))
+
+    monkeypatch.setattr(pm, "matmul_launch_plan", tampered)
+    wl = MatmulWorkload(m=256, n=256, k=512)
+    p = plan.plan(wl, strategy="exhaustive_vmem", controller="active")
+    rep = rc.matmul_dataflow(wl, p.schedule)
+    assert "RPC045" in _codes(rep.diagnostics)
+    assert not rep.ok
+
+
+def test_flash_dataflow_clean():
+    rep = rc.flash_dataflow(2, 256, 256, 64, bq=128, bk=128, causal=True)
+    assert rep.ok and rep.diagnostics == ()
+    assert set(rep.words) == {"q", "k", "v", "out"}
+
+
+def test_flash_dataflow_decode_geometry_clean():
+    # Single-query decode step with a KV-cache offset: the padded-causal
+    # divergence case the launch preflight was built for.
+    rep = rc.flash_dataflow(2, 1, 256, 64, bq=1, bk=128, causal=True,
+                            q_offset=255)
+    assert rep.ok and rep.diagnostics == ()
+
+
+def test_preflight_flash_dataflow_raises_on_bad_geometry():
+    with pytest.raises(rc.CheckError):
+        rc.preflight_flash_dataflow(2, 256, 256, 64, causal=True,
+                                    q_offset=-1)
+
+
+# -------------------------------------------- space-level certificates
+def test_certify_conv_space_zoo_layer():
+    wl = next(w for w in plan.conv_workloads("resnet18") if w.groups == 1
+              and (w.hi + 2 * (w.k // 2) - w.k) // w.stride + 1 == w.ho)
+    for ctrl in ("passive", "active"):
+        cert = rc.certify_conv_space(wl, controller=ctrl)
+        assert cert.ok and cert.diagnostics == ()
+        assert cert.kind == "conv" and cert.controller == ctrl
+        assert cert.n_candidates > 0
+        assert cert.n_equal_hbm + cert.n_bounded_hbm == cert.n_candidates
+
+
+def test_certify_conv_space_gates_unlaunchable():
+    wl = dataclasses.replace(_conv_wl(), groups=2)
+    cert = rc.certify_conv_space(wl)
+    assert cert.n_candidates == 0
+    assert _codes(cert.diagnostics) == {"RPC046"}
+    assert cert.ok                      # a warning gate, not a failed proof
+
+
+@pytest.mark.parametrize("ctrl", ["passive", "active"])
+def test_certify_matmul_space(ctrl):
+    cert = rc.certify_matmul_space(MatmulWorkload(m=1024, n=1024, k=1024),
+                                   controller=ctrl)
+    assert cert.ok and cert.diagnostics == ()
+    assert cert.n_candidates > 0
+    assert cert.n_equal_hbm + cert.n_bounded_hbm == cert.n_candidates
+
+
+def test_certify_space_dispatcher():
+    assert plan.certify_space(_conv_wl()).kind == "conv"
+    assert plan.certify_space(MatmulWorkload(m=512, n=512, k=512)
+                              ).kind == "matmul"
+
+
+conv_wl_st = st.builds(
+    _conv_wl,
+    cin=st.integers(1, 96), cout=st.integers(1, 96),
+    k=st.sampled_from([1, 3, 5, 7]),
+    s=st.integers(4, 40))
+
+
+@settings(max_examples=15, deadline=None)
+@given(wl=conv_wl_st, controller=st.sampled_from(["passive", "active"]),
+       budget=st.sampled_from([512, 2048, 8192]))
+def test_property_every_admitted_candidate_certifies(wl, controller, budget):
+    # The tentpole property: for any valid workload, every candidate the
+    # exact search space admits proves its word counts against the model.
+    cert = rc.certify_conv_space(wl, budget=budget, controller=controller)
+    assert cert.ok and cert.diagnostics == ()
+    assert cert.n_equal_hbm + cert.n_bounded_hbm == cert.n_candidates
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(64, 2048), n=st.integers(64, 2048),
+       k=st.integers(64, 2048),
+       controller=st.sampled_from(["passive", "active"]))
+def test_property_matmul_space_certifies(m, n, k, controller):
+    cert = rc.certify_matmul_space(MatmulWorkload(m=m, n=n, k=k),
+                                   controller=controller)
+    assert cert.ok
+    assert cert.n_equal_hbm + cert.n_bounded_hbm == cert.n_candidates
+
+
+# --------------------------------------------------- network-level sweep
+def test_check_network_dataflow_clean():
+    netp = plan.plan_graph("resnet18", controller="active")
+    diags = rc.check_network_dataflow(netp.graph, netp)
+    assert diags == []
+
+
+def test_check_dataflow_sweep_smoke():
+    diags, timings = rc.check_dataflow(nets=("alexnet",))
+    assert diags == []
+    assert timings["_certified"] > 0
+
+
+def test_preflight_network_kernels_runs_dataflow(monkeypatch):
+    # The pre-flight gate must invoke the dataflow layer when asked to.
+    from repro.check import kernels as rk
+    netp = plan.plan_graph("resnet18", controller="passive")
+    called = {}
+
+    def spy(graph, schedules):
+        called["yes"] = True
+        return []
+
+    import repro.check.dataflow as rd
+    monkeypatch.setattr(rd, "check_network_dataflow", spy)
+    rk.preflight_network_kernels(netp.graph, netp)
+    assert called.get("yes")
+    called.clear()
+    rk.preflight_network_kernels(netp.graph, netp, dataflow=False)
+    assert not called

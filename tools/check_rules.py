@@ -18,13 +18,18 @@ RPL102  never assign a ``*_words`` name from a ``*_bytes`` name (or vice
         versa) without an explicit conversion. Applies everywhere, tests
         included-by-omission (tests corrupt units on purpose and are not
         linted).
+RPL103  ``pl.pallas_call`` is invoked in exactly one place —
+        ``repro.kernels.launch.run`` — so every kernel launch is a
+        `LaunchPlan` the RPC04x dataflow analyzer can trace and certify.
+        Only ``src/repro/kernels/`` may touch it.
 RPL110  ``repro.core.bwmodel`` / ``repro.core.partitioner`` are deprecation
         shims; new code imports ``repro.plan``. Only the shim package itself
         may touch them.
 """
 
 from repro.check.lint import (cross_assign_rule, deprecated_import_rule,
-                              magic_energy_rule, raw_byte_arith_rule)
+                              magic_energy_rule, raw_byte_arith_rule,
+                              raw_pallas_rule)
 
 #: modules allowed to convert words -> bytes
 BYTE_MODEL_MODULES = (
@@ -44,5 +49,6 @@ RULES = [
     raw_byte_arith_rule(BYTE_MODEL_MODULES),
     magic_energy_rule(("src/repro/roofline/constants.py",)),
     cross_assign_rule(),
+    raw_pallas_rule(("src/repro/kernels/*",)),
     deprecated_import_rule(("src/repro/core/*",)),
 ]
