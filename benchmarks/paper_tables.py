@@ -270,6 +270,44 @@ def simplan_latency(smoke: bool = False) -> list[str]:
     return rows
 
 
+def planserve_rows(smoke: bool = False) -> list[str]:
+    """Planner-as-a-service load report (`repro.launch.planserve`): plans/sec
+    and p50/p99 latency for a seeded Poisson stream over the zoo x strategies
+    x controllers catalog, plus the headline batched-vs-sequential speedup —
+    a repeated zoo request stream served by batched ``plan_graphs`` micro-
+    batches (persistent context + graph-level plan LRU) vs a loop of the
+    frozen pre-fleet ``plan_graph_loop`` planner, which rebuilds every graph,
+    grid, and baseline per call. derived = plans/s, ms, a ratio, M words, or
+    a must-be-zero count per the row name; committed as
+    ``BENCH_planserve.json`` (``run.py planserve --json``). The wall-clock
+    rows are guarded by a floor (throughput/speedup) or ceiling (latency);
+    ``fleet_mwords`` and the mismatch/diagnostic counts are exact."""
+    import repro.check as rc
+    from repro.launch import planserve
+    from repro.plan import clear_plan_graph_cache, plan_graphs
+
+    scope = "zoo2" if smoke else "zoo"
+    load, _ = _timed(lambda: planserve.run_load(smoke=smoke))
+    sp, us = _timed(lambda: planserve.run_speedup(smoke=smoke))
+    rows = [
+        f"planserve/{scope}/plans_per_s,0,{load['plans_per_s']:.0f}",
+        f"planserve/{scope}/p50_ms,0,{load['p50_ms']:.2f}",
+        f"planserve/{scope}/p99_ms,0,{load['p99_ms']:.2f}",
+        f"planserve/{scope}/speedup_batched_vs_sequential,{us:.0f}"
+        f",{sp['batched_vs_sequential']:.1f}",
+        f"planserve/{scope}/word_mismatches,0,{sp['word_mismatches']}",
+        f"planserve/{scope}/fleet_mwords,0,{sp['fleet_total_mwords']:.2f}",
+    ]
+    # Acceptance: fleet outputs verify clean through `repro.check`.
+    nets = list(PAPER_CNNS)[:2] if smoke else PAPER_CNNS
+    clear_plan_graph_cache()
+    (plans, us) = _timed(lambda: plan_graphs(nets, 2048, "exact_opt",
+                                             "passive"))
+    diags = rc.check(list(plans))
+    rows.append(f"planserve/{scope}/fleet_check_diags,{us:.0f},{len(diags)}")
+    return rows
+
+
 def dse_pareto() -> list[str]:
     """Budget-vs-traffic Pareto frontier (exact search, active controller):
     the MAC budgets that actually buy bandwidth, per CNN."""

@@ -374,7 +374,9 @@ def check_netplan(netp: NetPlan) -> List[Diagnostic]:
 # ------------------------------------------------------------------ dispatch
 def check(obj: object, budget: Optional[int] = None) -> List[Diagnostic]:
     """Dispatch on the IR object kind: Plan, NetPlan, NetworkGraph, Workload,
-    or a (workload, schedule) pair."""
+    a (workload, schedule) pair, or a fleet of NetPlans (the list
+    ``plan_graphs`` returns — every member is verified, diagnostics are
+    concatenated in fleet order)."""
     if isinstance(obj, Plan):
         return check_plan(obj)
     if isinstance(obj, NetPlan):
@@ -386,6 +388,9 @@ def check(obj: object, budget: Optional[int] = None) -> List[Diagnostic]:
     if isinstance(obj, tuple) and len(obj) == 2 \
             and isinstance(obj[1], Schedule):
         return check_schedule(obj[0], obj[1], budget)
+    if isinstance(obj, (list, tuple)) and obj \
+            and all(isinstance(p, NetPlan) for p in obj):
+        return [d for p in obj for d in check_netplan(p)]
     if hasattr(obj, "grid") and hasattr(obj, "body"):   # a kernels.LaunchPlan
         from repro.check.dataflow import analyze_launch
         return analyze_launch(obj)[0]

@@ -1,0 +1,235 @@
+"""Planner-as-a-service: batch (graph, budget, objective) jobs into fleet
+planning calls and report plans/sec with p50/p99 latency under load.
+
+    PYTHONPATH=src python -m repro.launch.planserve --smoke --json \
+        --requests 64 --rate 500 --batch 16
+
+The server keeps one persistent `repro.plan.PlanContext` and drains FIFO
+micro-batches of concurrent requests into single ``plan_graphs`` calls, so
+candidate grids, baseline schedules, and sim evaluations are shared across
+every request the process ever serves, and repeat requests are answered from
+the graph-level plan LRU. The load generator uses a seeded Poisson arrival
+process on a virtual clock (only planning work is wall-timed), which makes
+the reported latency distribution deterministic enough to regression-guard.
+
+The ``speedup`` section times the same request stream both ways: a loop of
+`repro.plan.fleet.plan_graph_loop` calls — the frozen pre-fleet planner that
+rebuilds every graph, grid, and baseline per call — versus the batched
+server. Every served `NetPlan` is bit-for-bit the sequential answer
+(`tests/test_fleet.py` pins it; the benchmark re-asserts word equality).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.plan import PlanContext, plan_graphs
+from repro.plan.fleet import plan_graph_loop
+from repro.plan.netplan import DEFAULT_BEAM_WIDTH, DEFAULT_RESIDENCY_BYTES
+
+#: The service catalog the ISSUE-8 load report covers: the paper's CNN zoo
+#: crossed with both word-count strategies and both memory controllers.
+STRATEGIES = ("exact_opt", "paper_opt")
+CONTROLLERS = ("passive", "active")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """One planning job: a graph (or zoo CNN name) plus plan parameters."""
+
+    graph: Any
+    budget: "int | None" = None
+    strategy: str = "exact_opt"
+    controller: str = "passive"
+    residency_bytes: int = DEFAULT_RESIDENCY_BYTES
+    beam_width: int = DEFAULT_BEAM_WIDTH
+    objective: Any = None
+
+    def params(self) -> tuple:
+        """Fleet-call grouping key: every field except the graph."""
+        return (self.budget, self.strategy, self.controller,
+                self.residency_bytes, self.beam_width, self.objective)
+
+
+class PlanServer:
+    """Drains micro-batches of `PlanRequest`\\ s through ``plan_graphs``.
+
+    One persistent `PlanContext` lives for the server's lifetime; each
+    ``serve`` call groups its batch by plan parameters and issues one
+    ``plan_graphs`` call per group (duplicate graphs inside a group are
+    deduplicated by the fleet planner itself)."""
+
+    def __init__(self) -> None:
+        self.context = PlanContext()
+        self.served = 0
+
+    def serve(self, requests: "list[PlanRequest]") -> list:
+        """Plan a micro-batch; returns one `NetPlan` per request, in order."""
+        groups: dict[tuple, list[int]] = {}
+        for i, req in enumerate(requests):
+            groups.setdefault(req.params(), []).append(i)
+        out: list = [None] * len(requests)
+        for params, idxs in groups.items():
+            budget, strategy, controller, residency, beam, objective = params
+            plans = plan_graphs([requests[i].graph for i in idxs],
+                                budget=budget, strategy=strategy,
+                                controller=controller,
+                                residency_bytes=residency, beam_width=beam,
+                                objective=objective, context=self.context)
+            for i, netp in zip(idxs, plans):
+                out[i] = netp
+        self.served += len(requests)
+        return out
+
+
+def catalog(smoke: bool = False) -> list[PlanRequest]:
+    """The zoo x strategies x controllers request catalog (32 entries; the
+    smoke catalog keeps 2 networks -> 8 entries)."""
+    from repro.core.cnn_zoo import PAPER_CNNS
+    names = list(PAPER_CNNS)[:2] if smoke else list(PAPER_CNNS)
+    return [PlanRequest(graph=n, strategy=s, controller=c)
+            for n in names for s in STRATEGIES for c in CONTROLLERS]
+
+
+def run_load(requests: int = 64, rate_per_s: float = 500.0,
+             batch_max: int = 16, seed: int = 0,
+             smoke: bool = False) -> dict:
+    """Serve a seeded Poisson request stream; return the service report.
+
+    Arrivals are drawn over the catalog round-robin on a virtual clock;
+    only the planning work inside ``PlanServer.serve`` is wall-timed, so a
+    request's latency is its queueing delay plus the measured wall time of
+    the micro-batch that served it.
+    """
+    cat = catalog(smoke)
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_per_s, size=requests))
+    stream = [(float(arrivals[i]), cat[i % len(cat)])
+              for i in range(requests)]
+
+    server = PlanServer()
+    clock = 0.0
+    latencies = []
+    n_batches = 0
+    busy_s = 0.0
+    i = 0
+    while i < len(stream):
+        if clock < stream[i][0]:
+            clock = stream[i][0]          # idle until the next arrival
+        batch = [req for t, req in stream[i:i + batch_max] if t <= clock]
+        if not batch:
+            batch = [stream[i][1]]
+        t0 = time.perf_counter()
+        server.serve(batch)
+        wall = time.perf_counter() - t0
+        clock += wall
+        busy_s += wall
+        latencies.extend(clock - stream[i + j][0] for j in range(len(batch)))
+        i += len(batch)
+        n_batches += 1
+
+    lat_ms = np.asarray(latencies) * 1e3
+    return {
+        "requests": requests,
+        "catalog_size": len(cat),
+        "batches": n_batches,
+        "batch_max": batch_max,
+        "rate_per_s": rate_per_s,
+        "plans_per_s": requests / clock,
+        "busy_plans_per_s": requests / busy_s,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+    }
+
+
+def run_speedup(passes: int = 8, smoke: bool = False) -> dict:
+    """Time the same zoo request stream sequentially vs batched.
+
+    The stream is ``passes`` rounds over the CNN zoo at default parameters —
+    the repeat traffic a planner service actually sees. Sequential planning
+    is a loop of frozen pre-fleet ``plan_graph_loop`` calls (per-call graph,
+    grid, and baseline rebuilds, scalar per-state scoring); the batched side
+    is the server: one ``plan_graphs`` micro-batch per round against a
+    persistent context and the graph-level plan LRU. Word equality of every
+    pair of plans is asserted before timing.
+    """
+    from repro.core.cnn_zoo import PAPER_CNNS
+    names = (list(PAPER_CNNS)[:2] if smoke else list(PAPER_CNNS))
+    from repro.plan import clear_plan_graph_cache
+
+    server = PlanServer()
+    clear_plan_graph_cache()
+    reqs = [PlanRequest(graph=n) for n in names]
+    batched_plans = server.serve(reqs)        # warm-up + parity capture
+    loop_plans = [plan_graph_loop(n) for n in names]
+    mismatch = sum(
+        a.total_words != b.total_words or a.baseline_words != b.baseline_words
+        or [p.schedule for p in a.nodes] != [p.schedule for p in b.nodes]
+        for a, b in zip(batched_plans, loop_plans))
+
+    t0 = time.perf_counter()
+    for _ in range(passes):
+        for n in names:
+            plan_graph_loop(n)
+    t_seq = time.perf_counter() - t0
+
+    clear_plan_graph_cache()
+    server = PlanServer()
+    t0 = time.perf_counter()
+    for _ in range(passes):
+        server.serve(reqs)
+    t_batched = time.perf_counter() - t0
+
+    total = passes * len(names)
+    return {
+        "stream_requests": total,
+        "sequential_s": t_seq,
+        "batched_s": t_batched,
+        "sequential_plans_per_s": total / t_seq,
+        "batched_plans_per_s": total / t_batched,
+        "batched_vs_sequential": t_seq / t_batched,
+        "word_mismatches": mismatch,
+        "fleet_total_mwords": sum(p.total_words for p in batched_plans) / 1e6,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=500.0)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--passes", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    args = ap.parse_args(argv)
+
+    report = {
+        "load": run_load(requests=args.requests, rate_per_s=args.rate,
+                         batch_max=args.batch, seed=args.seed,
+                         smoke=args.smoke),
+        "speedup": run_speedup(passes=args.passes, smoke=args.smoke),
+    }
+    if args.as_json:
+        print(json.dumps(report, indent=2, sort_keys=True))
+    else:
+        ld, sp = report["load"], report["speedup"]
+        print(f"served {ld['requests']} requests in {ld['batches']} batches: "
+              f"{ld['plans_per_s']:.0f} plans/s  "
+              f"p50={ld['p50_ms']:.2f}ms p99={ld['p99_ms']:.2f}ms")
+        print(f"speedup over {sp['stream_requests']}-request zoo stream: "
+              f"batched {sp['batched_vs_sequential']:.1f}x sequential "
+              f"({sp['batched_plans_per_s']:.0f} vs "
+              f"{sp['sequential_plans_per_s']:.0f} plans/s), "
+              f"word_mismatches={sp['word_mismatches']}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

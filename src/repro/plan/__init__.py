@@ -22,10 +22,13 @@ simulator executes + cross-validates a `Schedule` against the analytical
 deprecation shims over this package.
 """
 
-from repro.plan import dse, graph, netplan, objectives, space
+from repro.plan import dse, fleet, graph, netplan, objectives, space
 from repro.plan.graph import NetworkGraph, Node, Tensor
 from repro.plan.netplan import (DEFAULT_RESIDENCY_BYTES, EdgePlan, NetPlan,
-                                NodePlan, network_report, plan_graph)
+                                NodePlan, PlanContext,
+                                clear_plan_graph_cache, network_report,
+                                plan_graph, plan_graph_cache_info)
+from repro.plan.fleet import plan_graphs
 from repro.plan.api import (DEFAULT_P_MACS, Plan, clear_plan_cache,
                             coerce_strategy, default_budget,
                             min_network_traffic, network_traffic, plan,
@@ -66,4 +69,7 @@ __all__ = [
     "graph", "netplan", "NetworkGraph", "Node", "Tensor",
     "NetPlan", "NodePlan", "EdgePlan", "plan_graph", "network_report",
     "DEFAULT_RESIDENCY_BYTES",
+    # --- fleet planning (repro.plan.fleet) ---
+    "fleet", "plan_graphs", "PlanContext",
+    "plan_graph_cache_info", "clear_plan_graph_cache",
 ]

@@ -27,6 +27,7 @@ Parity: the exact-search presets reproduce the seed scalar loops bit-for-bit
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Protocol, runtime_checkable
 
@@ -198,12 +199,23 @@ def strategy_spec(strategy: "Strategy | str", kind: str,
                   max_block: int = 4096) -> StrategySpec:
     """The (space, constraints, objective) preset behind a strategy name for
     one workload kind. Custom `register_strategy` presets take precedence;
-    unknown combinations raise the planner's 'not applicable' error."""
+    unknown combinations raise the planner's 'not applicable' error.
+
+    Builtin presets are memoized: specs and their spaces are stateless, so
+    every planner call for the same (strategy, kind, max_block) shares one
+    `StrategySpec` — which is what lets `PlanContext` share candidate grids
+    across a whole fleet batch without rebuilding the space each time."""
     name = strategy.value if isinstance(strategy, Strategy) else str(strategy)
     if name.startswith("sim_") and (kind, name) not in _CUSTOM_SPECS:
         import repro.sim  # noqa: F401  (registers the sim_* presets)
     if (kind, name) in _CUSTOM_SPECS:
         return _CUSTOM_SPECS[(kind, name)]
+    return _builtin_spec(name, kind, max_block)
+
+
+@functools.lru_cache(maxsize=None)
+def _builtin_spec(name: str, kind: str, max_block: int) -> StrategySpec:
+    strategy = name
     if kind == "conv":
         # GEMM-flavoured names degrade to their conv equivalents: the closed
         # form *is* the first-order model, the exact search is exhaustive.
@@ -273,8 +285,10 @@ def register_strategy(name: str, *, conv: StrategySpec | None = None,
     if matmul is not None:
         _CUSTOM_SPECS[("matmul", name)] = matmul
     # Plans are LRU-cached on the strategy *name*; drop anything cached under
-    # a previous registration of this name.
+    # a previous registration of this name — per-layer and graph-level alike.
     api.clear_plan_cache()
+    from repro.plan import netplan
+    netplan.clear_plan_graph_cache()
 
 
 def unregister_strategy(name: str) -> None:
@@ -287,6 +301,8 @@ def unregister_strategy(name: str) -> None:
     _CUSTOM_SPECS.pop(("matmul", name), None)
     planners.PLANNERS.pop(name, None)
     api.clear_plan_cache()
+    from repro.plan import netplan
+    netplan.clear_plan_graph_cache()
 
 
 # ---------------------------------------------------------------------- sweep

@@ -22,7 +22,14 @@ closed-form array code over a `Candidates` grid:
     integer-valued accumulations), so every metric matches scalar
     ``simulate()`` float-exactly — pinned by ``tests/test_sim_batch.py``
     across random workloads, both controllers, and the residency
-    (``spilled_in_words`` / ``out_spilled``) variants.
+    (``spilled_in_words`` / ``out_spilled``) variants;
+  * ``spilled_in_words`` may itself be a 1-D array (one entry per residency
+    state, e.g. a netplan beam frontier): the slot matrix gains a leading
+    states axis and every spill-dependent column comes back as a
+    ``(states, candidates)`` matrix — one call scores a whole frontier x grid
+    block, which is what makes fleet planning (`repro.plan.fleet`) grid-rate.
+    Each row is float-exactly the corresponding scalar-``spilled`` call
+    because the broadcast performs the identical elementwise operations.
 
 The expressions are plain ``numpy`` by default. Passing ``xp=jax.numpy``
 evaluates the same closed form under jax (jit-able; requires x64 enabled for
@@ -76,6 +83,12 @@ class BatchSimResult:
     epoch matrix and cached, so e.g. a latency objective evaluates only the
     cycle chain while a later ``energy_pj`` read on the same result reuses
     the already-computed row-activation counts.
+
+    With a vector ``spilled_in_words`` the epoch matrix is
+    ``(states, slots, candidates)`` and spill-dependent columns are
+    ``(states, candidates)``; spill-independent counters (``bank_conflicts``,
+    ``sram_reads``, ``output_words``) stay per-candidate vectors and
+    broadcast.
     """
 
     def __init__(self, kind: str, controller: Controller, params: SimParams,
@@ -127,14 +140,16 @@ class BatchSimResult:
     # ------------------------------------------------------ time / bandwidth
     @cached_property
     def cycles(self) -> Array:
-        cycles = self._phase_cycles.sum(axis=0)
+        # axis=-2 is the slot axis for both the (slots, candidates) matrix
+        # and the vector-spilled (states, slots, candidates) stack.
+        cycles = self._phase_cycles.sum(axis=-2)
         if self.params.dma_double_buffer:
             # `engine._fill_phase`: the un-overlapped first fetch of the
             # double-buffered pipeline — time only, its words are already
             # charged to the first epoch (whose fetch bound is exactly the
             # fill cost, and is zero when the epoch fetches nothing).
             fill, _, _ = self._fetch
-            cycles = cycles + fill[self._fill_row]
+            cycles = cycles + fill[..., self._fill_row, :]
         return cycles
 
     @property
@@ -149,7 +164,8 @@ class BatchSimResult:
         phase_cycles = self._phase_cycles
         phase_words = (e["fetch_words"] + e["bus_words"]) * e["count"]
         safe = xp.where(phase_cycles > 0, phase_cycles, 1.0)
-        return xp.where(phase_cycles > 0, phase_words / safe, 0.0).max(axis=0)
+        return xp.where(phase_cycles > 0,
+                        phase_words / safe, 0.0).max(axis=-2)
 
     @property
     def peak_bw_bytes_s(self) -> Array:
@@ -171,20 +187,23 @@ class BatchSimResult:
     @cached_property
     def row_hits(self) -> Array:
         _, bursts, rows = self._fetch
-        return ((bursts - rows) * self._e["count"]).sum(axis=0).astype(np.int64)
+        return ((bursts - rows)
+                * self._e["count"]).sum(axis=-2).astype(np.int64)
 
     @cached_property
     def row_misses(self) -> Array:
         _, _, rows = self._fetch
-        return (rows * self._e["count"]).sum(axis=0).astype(np.int64)
+        return (rows * self._e["count"]).sum(axis=-2).astype(np.int64)
 
     @cached_property
     def bank_conflicts(self) -> Array:
+        # Accumulator RMW traffic has no spilled-input dependence, so this
+        # column is per-candidate even under a vector spilled_in_words.
         if self.params.sram.ports_per_bank >= 2:
             return np.zeros(len(self), dtype=np.int64)
         xp, e = self._xp, self._e
         rmw = xp.where(e["first"], 0, e["acc_w"])   # update epochs RMW-pair
-        return (rmw * e["count"]).sum(axis=0).astype(np.int64)
+        return (rmw * e["count"]).sum(axis=-2).astype(np.int64)
 
     @property
     def row_miss_rate(self) -> Array:
@@ -257,13 +276,24 @@ class BatchSimResult:
             col = getattr(self, name)
         except AttributeError:
             raise KeyError(f"unknown sim metric {name!r}") from None
-        if not hasattr(col, "ndim") or col.ndim != 1:
+        # 1-D = per candidate; 2-D = (states, candidates) under a vector
+        # spilled_in_words.
+        if not hasattr(col, "ndim") or col.ndim not in (1, 2):
             raise KeyError(f"{name!r} is not a per-candidate metric")
         return col
 
 
+def _spill_views(spilled: "int | Array") -> "tuple[Any, Any]":
+    """(slot-matrix view, totals view) of ``spilled``: a scalar passes
+    through; a 1-D states vector is shaped to broadcast against the
+    ``(slots, candidates)`` matrix and the ``(candidates,)`` totals."""
+    if isinstance(spilled, np.ndarray) and spilled.ndim == 1:
+        return spilled[:, None, None], spilled[:, None]
+    return spilled, spilled
+
+
 def _conv_slots(wl: ConvWorkload, cands: Candidates, active: bool,
-                spilled: int, out_spilled: bool, xp: Any
+                spilled: "int | Array", out_spilled: bool, xp: Any
                 ) -> tuple[dict, Callable[[], dict], int]:
     """Vectorized `engine._conv_epochs` + `engine._conv_totals`: the epoch
     slot matrix, the exact totals, and the fill-phase fetch bytes."""
@@ -273,7 +303,8 @@ def _conv_slots(wl: ConvWorkload, cands: Candidates, active: bool,
     bn = np.asarray(cands.bn, dtype=np.int64)
     m_eff = xp.minimum(bm, mg)
     n_eff = xp.minimum(bn, ng)
-    spill_frac = spilled / wl.in_acts if wl.in_acts else 0.0
+    sp_slot, sp_total = _spill_views(spilled)
+    spill_frac = sp_slot / wl.in_acts if wl.in_acts else sp_slot * 0.0
     wb = wl.word_bytes
     hw_in, hw_out = wl.hi * wl.wi, wl.ho * wl.wo
     k2hw = wl.k * wl.k * hw_out
@@ -318,7 +349,7 @@ def _conv_slots(wl: ConvWorkload, cands: Candidates, active: bool,
         out_iters = -(-ng // n_eff)
         in_iters = -(-mg // m_eff)
         writes = in_iters * wl.out_acts
-        in_bus = spilled * out_iters
+        in_bus = sp_total * out_iters
         if not out_spilled:
             out_bus = xp.zeros_like(writes)
         elif active:
@@ -343,13 +374,14 @@ _K_SLOTS = ("only", "first", "mid", "last")
 
 
 def _gemm_slots(wl: MatmulWorkload, cands: Candidates, active: bool,
-                spilled: int, out_spilled: bool, xp: Any
+                spilled: "int | Array", out_spilled: bool, xp: Any
                 ) -> tuple[dict, Callable[[], dict], int]:
     """Vectorized `engine._gemm_epochs` + `engine._gemm_totals`."""
     bm = np.asarray(cands.bm, dtype=np.int64)
     bn = np.asarray(cands.bn, dtype=np.int64)
     bk = np.asarray(cands.bk, dtype=np.int64)
-    a_frac = spilled / (wl.m * wl.k) if wl.m * wl.k else 0.0
+    sp_slot, sp_total = _spill_views(spilled)
+    a_frac = sp_slot / (wl.m * wl.k) if wl.m * wl.k else sp_slot * 0.0
 
     bm_eff = xp.minimum(bm, wl.m)
     bn_eff = xp.minimum(bn, wl.n)
@@ -407,7 +439,7 @@ def _gemm_slots(wl: MatmulWorkload, cands: Candidates, active: bool,
         gi = -(-wl.m // bm)
         gj = -(-wl.n // bn)
         gk = -(-wl.k // bk)
-        a_bus = spilled * gj
+        a_bus = sp_total * gj
         b_bus = gi * (wl.k * wl.n)
         acc_words = wl.m * wl.n
         if not out_spilled:
@@ -438,7 +470,7 @@ def _gemm_slots(wl: MatmulWorkload, cands: Candidates, active: bool,
 def simulate_batch(workload: Workload, cands: Candidates,
                    controller: "Controller | str" = Controller.PASSIVE,
                    params: SimParams | None = None, *,
-                   spilled_in_words: int | None = None,
+                   spilled_in_words: "int | Array | None" = None,
                    out_spilled: bool = True,
                    xp: Any = np) -> BatchSimResult:
     """Simulate every candidate schedule of a grid in one array pass.
@@ -448,6 +480,11 @@ def simulate_batch(workload: Workload, cands: Candidates,
     grid, and ``spilled_in_words`` / ``out_spilled`` carry the residency
     convention of `repro.plan.netplan` unchanged. Every returned column is
     float-exactly the scalar report's value for that candidate.
+
+    ``spilled_in_words`` may also be a 1-D integer array (one residency state
+    per entry): spill-dependent metric columns then come back as
+    ``(states, candidates)`` matrices, each row float-exactly equal to the
+    scalar-``spilled`` call for that state.
     """
     params = DEFAULT_PARAMS if params is None else params
     controller = Controller.coerce(controller)
@@ -467,8 +504,19 @@ def simulate_batch(workload: Workload, cands: Candidates,
     else:
         raise TypeError(f"unknown workload type {type(workload).__name__}")
     spilled = wl_in if spilled_in_words is None else spilled_in_words
-    if not 0 <= spilled <= wl_in:
-        raise ValueError(f"spilled_in_words {spilled} outside [0, {wl_in}]")
+    if isinstance(spilled, (int, np.integer)):
+        if not 0 <= spilled <= wl_in:
+            raise ValueError(
+                f"spilled_in_words {spilled} outside [0, {wl_in}]")
+    else:
+        spilled = np.asarray(spilled, dtype=np.int64)
+        if spilled.ndim != 1:
+            raise ValueError(
+                f"vector spilled_in_words must be 1-D, got {spilled.ndim}-D")
+        if spilled.size and not (
+                (0 <= spilled.min()) and (spilled.max() <= wl_in)):
+            raise ValueError(
+                f"spilled_in_words entries outside [0, {wl_in}]")
 
     epochs, totals_fn, fill_row = builder(workload, cands, active, spilled,
                                           out_spilled, xp)

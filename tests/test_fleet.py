@@ -1,0 +1,261 @@
+"""Fleet-rate planning: batched ``plan_graphs`` must be bit-for-bit the
+sequential ``plan_graph`` answer per network (and both equal the frozen
+pre-fleet ``plan_graph_loop`` oracle), the shared `PlanContext` must actually
+share grids and sim evaluations across networks, the graph-level plan LRU
+must hit on repeat calls, ``NetPlan.replan`` must equal a from-scratch
+``plan_graph`` under random budget/residency/subgraph perturbations, fleet
+output must verify clean through `repro.check`, and the planner service must
+serve batched requests that match individual calls."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # tier-1 fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.cnn_zoo import PAPER_CNNS, get_cnn
+from repro.launch import planserve
+from repro.plan import (PlanContext, clear_plan_graph_cache, netplan,
+                        plan_graph, plan_graph_cache_info, plan_graphs)
+from repro.plan.fleet import plan_graph_loop
+from repro.plan.graph import NetworkGraph
+
+ZOO4 = ("alexnet", "squeezenet", "resnet18", "mobilenet")
+
+
+def _assert_same_plan(a, b):
+    assert a.total_words == b.total_words
+    assert a.baseline_words == b.baseline_words
+    assert a.resident_tensors == b.resident_tensors
+    assert a.peak_resident_bytes == b.peak_resident_bytes
+    assert [n.schedule for n in a.nodes] == [n.schedule for n in b.nodes]
+    assert [b_.schedule for b_ in a.baseline] == \
+        [b_.schedule for b_ in b.baseline]
+    assert [(e.tensor, e.words, e.resident, e.read_words, e.write_words)
+            for e in a.edges] == \
+        [(e.tensor, e.words, e.resident, e.read_words, e.write_words)
+         for e in b.edges]
+
+
+# ------------------------------------------------------- fleet == sequential
+@pytest.mark.parametrize("strategy", ["exact_opt", "paper_opt"])
+@pytest.mark.parametrize("controller", ["passive", "active"])
+def test_fleet_matches_sequential(strategy, controller):
+    clear_plan_graph_cache()
+    fleet = plan_graphs(ZOO4, 2048, strategy, controller)
+    clear_plan_graph_cache()
+    for name, batched in zip(ZOO4, fleet):
+        _assert_same_plan(
+            plan_graph(name, 2048, strategy, controller), batched)
+
+
+def test_fleet_full_zoo_default_params_matches_sequential():
+    clear_plan_graph_cache()
+    fleet = plan_graphs(PAPER_CNNS)
+    clear_plan_graph_cache()
+    for name, batched in zip(PAPER_CNNS, fleet):
+        _assert_same_plan(plan_graph(name), batched)
+
+
+def test_loop_reference_is_parity_oracle():
+    # The frozen pre-fleet planner (the benchmark's sequential baseline)
+    # produces the same plans as both modern paths.
+    clear_plan_graph_cache()
+    for name in ("alexnet", "resnet18"):
+        ref = plan_graph_loop(name)
+        _assert_same_plan(ref, plan_graph(name))
+
+
+def test_fleet_dedups_duplicate_requests():
+    clear_plan_graph_cache()
+    fleet = plan_graphs(["alexnet", "alexnet", "squeezenet", "alexnet"])
+    assert fleet[0] is fleet[1] is fleet[3]
+    assert fleet[2] is not fleet[0]
+    _assert_same_plan(fleet[0], plan_graph("alexnet"))
+
+
+# ----------------------------------------------------- cross-network sharing
+def test_fleet_shares_grids_across_networks():
+    # Two same-shape chains under different graph names: every grid the
+    # second lane needs was already built for the first.
+    layers = get_cnn("alexnet")
+    g1 = NetworkGraph.from_layers(layers, name="chain-a")
+    g2 = NetworkGraph.from_layers(layers, name="chain-b")
+    ctx = PlanContext()
+    clear_plan_graph_cache()
+    fleet = plan_graphs([g1, g2], 2048, context=ctx)
+    assert ctx.stats["grid_hits"] > 0
+    assert ctx.stats["grid_misses"] == len(layers)
+    # identical shapes at identical steps score as one bucketed call
+    assert ctx.stats["fleet_bucketed_steps"] > 0
+    clear_plan_graph_cache()
+    _assert_same_plan(fleet[0], plan_graph(g1, 2048))
+    _assert_same_plan(fleet[1], plan_graph(g2, 2048))
+
+
+def test_fleet_shares_sim_evals_across_networks():
+    # Satellite: the _SimNodeGrid residency-key eval cache must be shared
+    # across networks — the second lane's states hit, not re-simulate.
+    layers = get_cnn("alexnet")[:4]
+    g1 = NetworkGraph.from_layers(layers, name="sim-a")
+    g2 = NetworkGraph.from_layers(layers, name="sim-b")
+    ctx = PlanContext()
+    clear_plan_graph_cache()
+    fleet = plan_graphs([g1, g2], 2048, objective="sim_latency",
+                        context=ctx)
+    assert ctx.stats["sim_eval_hits"] > 0
+    assert ctx.stats["grid_misses"] == len(layers)
+    clear_plan_graph_cache()
+    _assert_same_plan(
+        fleet[0], plan_graph(g1, 2048, objective="sim_latency"))
+    _assert_same_plan(
+        fleet[1], plan_graph(g2, 2048, objective="sim_latency"))
+
+
+def test_fleet_sim_objective_matches_sequential():
+    clear_plan_graph_cache()
+    nets = ("alexnet", "squeezenet")
+    fleet = plan_graphs(nets, 2048, "exact_opt", "active",
+                        objective="sim_latency")
+    clear_plan_graph_cache()
+    for name, batched in zip(nets, fleet):
+        _assert_same_plan(plan_graph(name, 2048, "exact_opt", "active",
+                                     objective="sim_latency"), batched)
+
+
+# ------------------------------------------------------ graph-level plan LRU
+def test_plan_graph_cache_hit_on_repeat():
+    clear_plan_graph_cache()
+    info0 = plan_graph_cache_info()
+    assert (info0.hits, info0.misses, info0.currsize) == (0, 0, 0)
+    p1 = plan_graph("alexnet", 2048)
+    p2 = plan_graph("alexnet", 2048)
+    assert p2 is p1                                 # repeat = lookup cost
+    info = plan_graph_cache_info()
+    assert info.hits == 1 and info.misses == 1 and info.currsize == 1
+    assert plan_graph("alexnet", 1024) is not p1    # budget is in the key
+    assert plan_graph_cache_info().currsize == 2
+    clear_plan_graph_cache()
+    assert plan_graph_cache_info().currsize == 0
+
+
+def test_fleet_populates_and_hits_the_same_cache():
+    clear_plan_graph_cache()
+    fleet = plan_graphs(["alexnet", "squeezenet"])
+    assert plan_graph("alexnet") is fleet[0]        # sequential hits fleet's
+    before = plan_graph_cache_info().hits
+    again = plan_graphs(["alexnet", "squeezenet"])
+    assert [p is q for p, q in zip(fleet, again)] == [True, True]
+    assert plan_graph_cache_info().hits >= before + 2
+
+
+# ------------------------------------------------------ incremental replan
+REPLAN_NETS = ("alexnet", "squeezenet", "resnet18")
+RESIDENCIES = (0, 1 << 20, netplan.DEFAULT_RESIDENCY_BYTES, 8 << 20)
+BUDGETS = (None, 1024, 2048, 4096)
+
+
+@settings(max_examples=12, deadline=None)
+@given(name=st.sampled_from(REPLAN_NETS),
+       ctrl=st.sampled_from(("passive", "active")),
+       b0=st.sampled_from(BUDGETS), r0=st.sampled_from(RESIDENCIES),
+       b1=st.sampled_from(BUDGETS), r1=st.sampled_from(RESIDENCIES))
+def test_replan_params_matches_fresh(name, ctrl, b0, r0, b1, r1):
+    clear_plan_graph_cache()
+    base = plan_graph(name, b0, controller=ctrl, residency_bytes=r0)
+    clear_plan_graph_cache()
+    fresh = plan_graph(name, b1, controller=ctrl, residency_bytes=r1)
+    clear_plan_graph_cache()                 # force the replay path
+    rp = base.replan(budget=b1, residency_bytes=r1)
+    _assert_same_plan(rp, fresh)
+    assert netplan.network_report(rp.graph, rp.schedules,
+                                  rp.resident_tensors) == \
+        netplan.network_report(fresh.graph, fresh.schedules,
+                               fresh.resident_tensors)
+    assert rp.report() == fresh.report()     # word-for-word
+
+
+@settings(max_examples=10, deadline=None)
+@given(name=st.sampled_from(REPLAN_NETS),
+       ctrl=st.sampled_from(("passive", "active")),
+       cut_raw=st.integers(min_value=0, max_value=30),
+       extend=st.booleans())
+def test_replan_subgraph_matches_fresh(name, ctrl, cut_raw, extend):
+    layers = list(get_cnn(name))
+    cut = 2 + cut_raw % (len(layers) - 1)    # truncate point in [2, len]
+    new_layers = layers[:cut] + (layers[max(0, cut - 2):cut] if extend
+                                 else [])
+    g0 = NetworkGraph.from_layers(layers, name=f"{name}-chain")
+    g1 = NetworkGraph.from_layers(new_layers, name=f"{name}-chain")
+    clear_plan_graph_cache()
+    base = plan_graph(g0, 2048, controller=ctrl)
+    clear_plan_graph_cache()
+    fresh = plan_graph(g1, 2048, controller=ctrl)
+    clear_plan_graph_cache()                 # force the replay path
+    rp = base.replan(subgraph=g1)
+    _assert_same_plan(rp, fresh)
+    assert rp.report() == fresh.report()
+
+
+def test_replan_noop_returns_self():
+    clear_plan_graph_cache()
+    base = plan_graph("alexnet")
+    assert base.replan() is base
+
+
+# ---------------------------------------------------------- check + service
+def test_fleet_output_passes_check():
+    import repro.check as rc
+    clear_plan_graph_cache()
+    fleet = plan_graphs(ZOO4, 2048, "exact_opt", "passive")
+    diags = rc.check(fleet)                  # list dispatch, concatenated
+    assert diags == []
+    assert rc.check(fleet[0]) == []
+
+
+def test_planserve_serves_batches_matching_individual_calls():
+    server = planserve.PlanServer()
+    reqs = [planserve.PlanRequest(graph="alexnet"),
+            planserve.PlanRequest(graph="squeezenet",
+                                  controller="active"),
+            planserve.PlanRequest(graph="alexnet", strategy="paper_opt")]
+    plans = server.serve(reqs)
+    assert server.served == len(reqs)
+    clear_plan_graph_cache()
+    _assert_same_plan(plans[0], plan_graph("alexnet"))
+    _assert_same_plan(plans[1], plan_graph("squeezenet",
+                                           controller="active"))
+    _assert_same_plan(plans[2], plan_graph("alexnet", strategy="paper_opt"))
+
+
+def test_planserve_load_and_speedup_reports():
+    load = planserve.run_load(requests=8, rate_per_s=1e6, batch_max=4,
+                              smoke=True)
+    assert load["requests"] == 8
+    assert load["batches"] <= 8
+    assert load["p50_ms"] <= load["p99_ms"]
+    assert load["plans_per_s"] > 0
+    sp = planserve.run_speedup(passes=1, smoke=True)
+    assert sp["word_mismatches"] == 0
+    assert sp["batched_vs_sequential"] > 0
+    assert sp["fleet_total_mwords"] > 0
+
+
+def test_planserve_bench_rows_parse():
+    import benchmarks.run as bench_run
+    from benchmarks import paper_tables
+    rows = paper_tables.planserve_rows(smoke=True)
+    parsed = [bench_run.parse_row(r) for r in rows]
+    names = {p["name"] for p in parsed}
+    assert any(n.endswith("/plans_per_s") for n in names)
+    by_name = {p["name"]: p for p in parsed}
+    assert by_name["planserve/zoo2/word_mismatches"]["derived"] == 0.0
+    assert by_name["planserve/zoo2/fleet_check_diags"]["derived"] == 0.0
+    # wall-clock rows carry their floor/ceiling class; words stay exact
+    assert bench_run._metric_class("planserve/zoo/plans_per_s") == "speedup"
+    assert bench_run._metric_class("planserve/zoo/p99_ms") == "latency"
+    assert bench_run._metric_class("planserve/zoo/fleet_mwords") == "exact"
+    assert bench_run._metric_class("sim/alexnet/passive/latency_ms") == \
+        "exact"

@@ -125,6 +125,37 @@ def test_batch_nondefault_params_match_scalar():
         assert_batch_matches_scalar(wl, cands, Controller.ACTIVE, params)
 
 
+@pytest.mark.parametrize("controller", CONTROLLERS)
+def test_vector_spilled_rows_match_scalar_spills(controller):
+    """A 1-D ``spilled_in_words`` vector (one residency state per row — the
+    fleet frontier shape) is float-exactly the stack of scalar-spill calls,
+    on every metric, conv and matmul alike."""
+    conv = plan.conv_workloads("alexnet")[1]
+    m, n = conv_model.conv_exact_candidates(conv, 2048)
+    conv_cands = Candidates(kind="conv", bm=m, bn=n, bk=np.zeros_like(m))
+    gemm = MatmulWorkload(m=96, n=200, k=64)
+    gemm_cands = dse.AlignedBlockSpace(max_block=128)(gemm, 1 << 20)
+    for wl, cands, wl_in in ((conv, conv_cands, conv.in_acts),
+                             (gemm, gemm_cands, gemm.m * gemm.k)):
+        spills = np.asarray([0, wl_in // 3, wl_in // 2, wl_in],
+                            dtype=np.int64)
+        for out_spilled in (True, False):
+            vec = simulate_batch(wl, cands, controller,
+                                 spilled_in_words=spills,
+                                 out_spilled=out_spilled)
+            for r, s in enumerate(spills):
+                row = simulate_batch(wl, cands, controller,
+                                     spilled_in_words=int(s),
+                                     out_spilled=out_spilled)
+                for f in METRICS:
+                    m_f = np.asarray(vec.metric(f))
+                    # spill-independent metrics stay 1-D (candidates,);
+                    # spill-dependent ones are (spills, candidates)
+                    got = m_f if m_f.ndim == 1 else m_f[r]
+                    want = row.metric(f)
+                    assert np.array_equal(got, want), (wl.name, f, int(s))
+
+
 def test_batch_guards():
     conv = plan.conv_workloads("alexnet")[0]
     gemm = MatmulWorkload(m=64, n=64, k=64)
