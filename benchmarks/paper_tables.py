@@ -308,6 +308,84 @@ def planserve_rows(smoke: bool = False) -> list[str]:
     return rows
 
 
+def obs_rows(smoke: bool = False) -> list[str]:
+    """Observability (`repro.obs`) cost + exactness rows.
+
+    * ``disabled_overhead`` — the tracer-off ceiling on the planserve smoke
+      stream: 1 + (per-``span()`` disabled dispatch cost x spans the stream
+      would record) / stream busy seconds. Computed from a microbenchmark of
+      the no-op path (noise-immune, ~1.0000x) and guarded by the hard <= 1.05
+      ``overhead`` class in ``run.py check`` — the acceptance bound that
+      leaving spans in hot paths costs <= 5%.
+    * ``enabled_overhead`` — measured busy-time ratio of the same stream with
+      a recording tracer vs without (wall-clock: ceiling-guarded only).
+    * ``export_wall_ms`` — resnet18/active virtual-time trace export+verify
+      wall time (ceiling-guarded).
+    * ``trace_events`` — virtual-time export event count (exact; the
+      *span* count of the wall-clock stream is batching- and hence
+      machine-dependent, so it informs the overhead model but is not a row).
+    * ``word_pin_mismatches`` — zoo x controller traces whose per-track
+      cycles or counter words fail the word-for-word pin (must be 0).
+    * ``metric_families`` — distinct metric names in the registry after the
+      stream (exact).
+
+    Committed as ``BENCH_obs.json`` (``run.py obs --json``)."""
+    from repro import obs
+    from repro.launch import planserve
+    from repro.plan import clear_plan_graph_cache
+    from repro.plan.netplan import plan_graph
+
+    scope = "zoo2" if smoke else "zoo"
+    # Warm every cache once so the tracer-off / tracer-on streams compare
+    # identical planning work.
+    planserve.run_load(smoke=True)
+
+    rep_off, _ = _timed(lambda: planserve.run_load(smoke=True))
+    busy_off = rep_off["requests"] / rep_off["busy_plans_per_s"]
+    with obs.tracing() as tr:
+        rep_on, _ = _timed(lambda: planserve.run_load(smoke=True))
+    busy_on = rep_on["requests"] / rep_on["busy_plans_per_s"]
+    n_spans = len(tr)
+
+    # The disabled fast path, microbenchmarked: one module-global read plus
+    # the shared no-op context manager.
+    n_calls = 200_000
+    with obs.Stopwatch() as sw:
+        for _ in range(n_calls):
+            with obs.span("bench"):
+                pass
+    span_cost_s = sw.s / n_calls
+    disabled_overhead = 1.0 + span_cost_s * n_spans / busy_off
+    enabled_overhead = busy_on / busy_off
+
+    # Virtual-time export: wall time + the word-for-word pins over the zoo.
+    nets = list(PAPER_CNNS)[:2] if smoke else list(PAPER_CNNS)
+    clear_plan_graph_cache()
+    report = plan_graph("resnet18", controller="active").simulate()
+    (events, export_us) = _timed(
+        lambda: obs.simreport_to_trace(report))
+    obs.verify_sim_trace(report, events)
+
+    mismatches = 0
+    for net in nets:
+        for ctrl in ("passive", "active"):
+            r = plan_graph(net, controller=ctrl).simulate()
+            try:
+                obs.verify_sim_trace(r, obs.simreport_to_trace(r))
+            except ValueError:
+                mismatches += 1
+
+    return [
+        f"obs/{scope}/disabled_overhead,{span_cost_s * 1e6:.4f}"
+        f",{disabled_overhead:.4f}",
+        f"obs/{scope}/enabled_overhead,0,{enabled_overhead:.3f}",
+        f"obs/{scope}/export_wall_ms,{export_us:.0f},{export_us / 1e3:.2f}",
+        f"obs/{scope}/trace_events,0,{len(events)}",
+        f"obs/{scope}/word_pin_mismatches,0,{mismatches}",
+        f"obs/{scope}/metric_families,0,{len(obs.REGISTRY.families())}",
+    ]
+
+
 def dse_pareto() -> list[str]:
     """Budget-vs-traffic Pareto frontier (exact search, active controller):
     the MAC budgets that actually buy bandwidth, per CNN."""

@@ -35,6 +35,11 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
             spaces, both controllers) plus a must-be-zero diagnostic row
             (with --json, merged into BENCH_check.json and guarded by
             ``check``)
+  obs     — observability (repro.obs) cost + exactness: disabled-tracer
+            overhead ceiling on the planserve smoke stream, enabled-tracer
+            ratio, Perfetto export wall time, and the zoo word-for-word
+            trace pins (with --json, written to BENCH_obs.json and guarded
+            by ``check``)
   kernels — VMEM-level active/passive traffic + interpret timings
 
 Usage: python benchmarks/run.py [section] [--json] [--smoke]
@@ -80,7 +85,8 @@ ARTIFACTS = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json",
              "simplan": "BENCH_simplan.json",
              "planserve": "BENCH_planserve.json",
              "check-plans": "BENCH_check.json",
-             "check-dataflow": "BENCH_check.json"}
+             "check-dataflow": "BENCH_check.json",
+             "obs": "BENCH_obs.json"}
 
 # ``check`` tolerance classes. Every ``derived`` value in the committed
 # artifacts is a deterministic model output (word counts, simulated
@@ -92,14 +98,20 @@ ARTIFACTS = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json",
 # enough to catch a vectorization regression collapsing to ~1x), and the
 # planner-service ``p50_ms``/``p99_ms`` latencies against the matching
 # ceiling (fresh <= committed / tol) without turning CI hardware variance
-# into failures.
+# into failures. The obs ``disabled_overhead`` row is the one absolute
+# bound: the tracer-off span cost on the planserve smoke stream must stay
+# <= 1.05x regardless of the committed value.
 DEFAULT_CHECK_TOL = 0.20
 
 
 def _metric_class(name: str) -> str:
+    if name.endswith("/disabled_overhead"):
+        return "overhead"                     # hard <= 1.05 acceptance bound
     if "speedup" in name or "plans_per_s" in name:
         return "speedup"                      # wall-clock ratio: floor
-    if name.endswith("/p50_ms") or name.endswith("/p99_ms"):
+    if (name.endswith("/p50_ms") or name.endswith("/p99_ms")
+            or name.endswith("/enabled_overhead")
+            or name.endswith("/export_wall_ms")):
         return "latency"                      # wall-clock latency: ceiling
     return "exact"
 
@@ -126,6 +138,10 @@ def check_benchmarks(sections: dict, tol: float = DEFAULT_CHECK_TOL) -> int:
                 ok = new["derived"] == old["derived"]
             elif cls == "latency":
                 ok = new["derived"] <= old["derived"] / tol
+            elif cls == "overhead":
+                # Tracer-off cost ceiling: absolute (<= 1.05x), never
+                # loosened by a slower committed value.
+                ok = new["derived"] <= max(old["derived"], 1.05)
             else:
                 ok = new["derived"] >= old["derived"] * tol
             if not ok:
@@ -171,6 +187,7 @@ def main(argv: list[str] | None = None) -> None:
                                          smoke=smoke),
         "check-dataflow": functools.partial(paper_tables.check_dataflow_rows,
                                             smoke=smoke),
+        "obs": functools.partial(paper_tables.obs_rows, smoke=smoke),
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }

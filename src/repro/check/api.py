@@ -10,9 +10,9 @@ the source tree.
 from __future__ import annotations
 
 import pathlib
-import time
 from typing import List, Optional, Sequence, Tuple
 
+from repro.obs.trace import Stopwatch
 from repro.check.diagnostics import Diagnostic, raise_on_error
 from repro.check.kernels import check_network_kernels
 from repro.check.lint import lint_repo
@@ -51,26 +51,27 @@ def check_plans(nets: Sequence[str] = PAPER_CNNS,
     timings: dict[str, float] = {}
     for net in nets:
         for ctrl in controllers:
-            t0 = time.perf_counter()
-            netp = plan_graph(net, budget=budget, strategy=strat,
-                              controller=Controller(ctrl))
-            found = check(netp)
-            if with_kernels:
-                g = netp.graph
-                launchable = [
-                    n for n in g.workload_nodes
-                    if n.workload is not None
-                    and getattr(n.workload, "groups", 0) == 1
-                    and (n.workload.hi + 2 * (n.workload.k // 2)
-                         - n.workload.k) // n.workload.stride + 1
-                    == n.workload.ho]
-                sub = {n.name: netp.schedules.get(n.name) for n in launchable}
-                found += [d for d in check_network_kernels(g, sub)
-                          if d.code != "RPC033"]
-            diags += [Diagnostic(d.code, f"{net}/{ctrl}:{d.subject}",
-                                 d.message, d.severity, d.hint, d.file,
-                                 d.line) for d in found]
-            timings[f"{net}/{ctrl}"] = time.perf_counter() - t0
+            with Stopwatch(f"check.plans/{net}/{ctrl}", cat="check") as sw:
+                netp = plan_graph(net, budget=budget, strategy=strat,
+                                  controller=Controller(ctrl))
+                found = check(netp)
+                if with_kernels:
+                    g = netp.graph
+                    launchable = [
+                        n for n in g.workload_nodes
+                        if n.workload is not None
+                        and getattr(n.workload, "groups", 0) == 1
+                        and (n.workload.hi + 2 * (n.workload.k // 2)
+                             - n.workload.k) // n.workload.stride + 1
+                        == n.workload.ho]
+                    sub = {n.name: netp.schedules.get(n.name)
+                           for n in launchable}
+                    found += [d for d in check_network_kernels(g, sub)
+                              if d.code != "RPC033"]
+                diags += [Diagnostic(d.code, f"{net}/{ctrl}:{d.subject}",
+                                     d.message, d.severity, d.hint, d.file,
+                                     d.line) for d in found]
+            timings[f"{net}/{ctrl}"] = sw.s
     return diags, timings
 
 

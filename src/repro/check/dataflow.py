@@ -935,52 +935,52 @@ def check_dataflow(nets: Sequence[str] = ("resnet18",),
     (3) an `AlignedBlockSpace` GEMM under both controllers. Returns
     (diagnostics, {subject: seconds}) like `check_plans`.
     """
-    import time
-
+    from repro.obs.trace import Stopwatch
     from repro.plan.workload import conv_workloads
     diags: List[Diagnostic] = []
     timings: dict = {}
     counts: dict = {}
 
-    t0 = time.perf_counter()
-    rep = conv_dataflow(
-        ConvWorkload(name="conv64", cin=64, cout=128, k=3, wi=16, hi=16,
-                     wo=16, ho=16),
-        Schedule(kind="conv", bm=32, bn=32, controller=Controller.PASSIVE))
-    diags += list(rep.diagnostics)
-    for ctrl in ("active", "passive"):
-        rep = matmul_dataflow(
-            MatmulWorkload(m=512, n=512, k=1024),
-            Schedule(kind="matmul", bm=128, bn=128, bk=256,
-                     controller=Controller.coerce(ctrl)))
+    with Stopwatch("check.dataflow/kernels", cat="check") as sw:
+        rep = conv_dataflow(
+            ConvWorkload(name="conv64", cin=64, cout=128, k=3, wi=16, hi=16,
+                         wo=16, ho=16),
+            Schedule(kind="conv", bm=32, bn=32,
+                     controller=Controller.PASSIVE))
         diags += list(rep.diagnostics)
-    diags += list(flash_dataflow(2, 256, 256, 64).diagnostics)
-    diags += list(flash_dataflow(2, 1, 256, 64, bq=1,
-                                 q_offset=255).diagnostics)
-    timings["kernels"] = time.perf_counter() - t0
+        for ctrl in ("active", "passive"):
+            rep = matmul_dataflow(
+                MatmulWorkload(m=512, n=512, k=1024),
+                Schedule(kind="matmul", bm=128, bn=128, bk=256,
+                         controller=Controller.coerce(ctrl)))
+            diags += list(rep.diagnostics)
+        diags += list(flash_dataflow(2, 256, 256, 64).diagnostics)
+        diags += list(flash_dataflow(2, 1, 256, 64, bq=1,
+                                     q_offset=255).diagnostics)
+    timings["kernels"] = sw.s
 
     for net in nets:
-        t0 = time.perf_counter()
-        n_cand = n_eq = 0
-        for wl in conv_workloads(net):
-            launchable = (wl.groups == 1 and
-                          (wl.hi + 2 * (wl.k // 2) - wl.k) // wl.stride + 1
-                          == wl.ho)
-            if not launchable:
-                continue     # the runner never launches it; geometry reports
-            for ctrl in controllers:
-                cert = certify_conv_space(wl, controller=ctrl)
-                diags += [d for d in cert.diagnostics]
-                n_cand += cert.n_candidates
-                n_eq += cert.n_equal_hbm
-        timings[f"space/{net}"] = time.perf_counter() - t0
+        with Stopwatch(f"check.dataflow/space/{net}", cat="check") as sw:
+            n_cand = n_eq = 0
+            for wl in conv_workloads(net):
+                launchable = (wl.groups == 1 and
+                              (wl.hi + 2 * (wl.k // 2) - wl.k) // wl.stride
+                              + 1 == wl.ho)
+                if not launchable:
+                    continue  # the runner never launches it; geometry reports
+                for ctrl in controllers:
+                    cert = certify_conv_space(wl, controller=ctrl)
+                    diags += [d for d in cert.diagnostics]
+                    n_cand += cert.n_candidates
+                    n_eq += cert.n_equal_hbm
+        timings[f"space/{net}"] = sw.s
         counts[net] = (n_cand, n_eq)
 
-    t0 = time.perf_counter()
-    for ctrl in controllers:
-        cert = certify_matmul_space(MatmulWorkload(m=4096, n=4096, k=4096),
-                                    controller=ctrl)
-        diags += list(cert.diagnostics)
-    timings["space/gemm"] = time.perf_counter() - t0
+    with Stopwatch("check.dataflow/space/gemm", cat="check") as sw:
+        for ctrl in controllers:
+            cert = certify_matmul_space(
+                MatmulWorkload(m=4096, n=4096, k=4096), controller=ctrl)
+            diags += list(cert.diagnostics)
+    timings["space/gemm"] = sw.s
     timings["_certified"] = sum(c for c, _ in counts.values())
     return diags, timings

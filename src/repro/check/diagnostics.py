@@ -183,6 +183,11 @@ _register("RPL103", "raw-pallas-call", Severity.ERROR,
           "build a repro.kernels.launch.LaunchPlan and execute it with "
           "launch.run() so the dataflow analyzer sees the same launch that "
           "runs")
+_register("RPL104", "adhoc-wall-timing", Severity.ERROR,
+          "raw wall-clock read (time.perf_counter & co) outside repro.obs / "
+          "benchmarks",
+          "measure through repro.obs.Stopwatch (or a span) so the interval "
+          "is also visible to the tracer")
 _register("RPL110", "deprecated-import", Severity.WARNING,
           "import of the deprecated core.bwmodel / core.partitioner shims",
           "import from repro.plan (conv_model / gemm_model) instead")

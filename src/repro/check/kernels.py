@@ -366,8 +366,12 @@ def preflight_network_kernels(graph: NetworkGraph, schedules: Any,
     eq (2)/(3) word-count equivalence — cached per launch geometry, so the
     added cost across a whole zoo is a handful of traces.
     """
-    found = check_network_kernels(graph, schedules, params, vmem_budget)
-    if dataflow and not errors(found):
-        from repro.check.dataflow import check_network_dataflow
-        found += check_network_dataflow(graph, schedules)
-    raise_on_error(found, context="kernel pre-flight failed")
+    from repro.obs.trace import span
+    with span("kernel.preflight", cat="kernel", graph=graph.name,
+              dataflow=dataflow) as sp:
+        found = check_network_kernels(graph, schedules, params, vmem_budget)
+        if dataflow and not errors(found):
+            from repro.check.dataflow import check_network_dataflow
+            found += check_network_dataflow(graph, schedules)
+        sp.set("diagnostics", len(found))
+        raise_on_error(found, context="kernel pre-flight failed")

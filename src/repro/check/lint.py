@@ -16,6 +16,10 @@ The verifier (layer 1) proves individual IR objects; this layer proves the
   * RPL103 — ``pl.pallas_call`` is invoked in exactly one place
     (``repro.kernels.launch.run``): every kernel goes through a `LaunchPlan`
     so the RPC04x dataflow analyzer certifies the launch that actually runs.
+  * RPL104 — ad-hoc wall-clock reads (``time.perf_counter`` & co) live only
+    in ``repro.obs``, ``benchmarks/`` and the planserve load generator;
+    everywhere else measures through ``obs.Stopwatch`` so the interval can
+    double as a trace span.
   * RPL110 — the pre-`repro.plan` shims (``repro.core.bwmodel``,
     ``repro.core.partitioner``) are deprecated import surfaces.
 
@@ -52,6 +56,7 @@ BYTE_MODEL_MODULES = (
     "src/repro/sim/*",
     "src/repro/roofline/*",
     "src/repro/check/*",
+    "src/repro/obs/export.py",
 )
 
 ENERGY_CONSTANT_HOME = ("src/repro/roofline/constants.py",)
@@ -62,6 +67,15 @@ KERNEL_LAUNCH_HOME = ("src/repro/kernels/*",)
 
 DEPRECATED_MODULES = ("repro.core.bwmodel", "repro.core.partitioner")
 DEPRECATED_IMPORT_OK = ("src/repro/core/*",)
+
+#: the only homes for raw wall-clock reads: the tracing package itself,
+#: benchmark harnesses, and the planner-service load generator (it wall-times
+#: micro-batches on a virtual clock). Everything else uses obs.Stopwatch,
+#: so every measured interval is also a potential trace span.
+WALL_TIMING_HOME = ("src/repro/obs/*", "benchmarks/*",
+                    "src/repro/launch/planserve.py")
+WALL_CLOCK_FNS = frozenset(
+    {"perf_counter", "perf_counter_ns", "monotonic", "monotonic_ns"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +210,25 @@ def raw_pallas_rule(
     return LintRule("RPL103", _visit_raw_pallas, tuple(allowed))
 
 
+# --------------------------------------------------------------- RPL104
+def _visit_adhoc_timing(tree: ast.Module, rel: str) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _name_of(node.func) \
+                in WALL_CLOCK_FNS:
+            out.append(Diagnostic(
+                "RPL104", rel,
+                f"ad-hoc wall-clock timing ({_name_of(node.func)}) outside "
+                f"repro.obs / benchmarks — use obs.Stopwatch (or a span)",
+                file=rel, line=node.lineno))
+    return out
+
+
+def adhoc_timing_rule(
+        allowed: Sequence[str] = WALL_TIMING_HOME) -> LintRule:
+    return LintRule("RPL104", _visit_adhoc_timing, tuple(allowed))
+
+
 # --------------------------------------------------------------- RPL110
 def _visit_deprecated_import(tree: ast.Module, rel: str) -> List[Diagnostic]:
     out: List[Diagnostic] = []
@@ -227,7 +260,7 @@ def deprecated_import_rule(
 
 def default_rules() -> List[LintRule]:
     return [raw_byte_arith_rule(), magic_energy_rule(), cross_assign_rule(),
-            raw_pallas_rule(), deprecated_import_rule()]
+            raw_pallas_rule(), adhoc_timing_rule(), deprecated_import_rule()]
 
 
 # ----------------------------------------------------------------- driver

@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import span
 from repro.plan import conv_model
 from repro.plan.planners import get_planner
 from repro.plan.schedule import Controller, Schedule, Strategy
@@ -79,10 +81,24 @@ def coerce_strategy(value: "Strategy | str") -> "Strategy | str":
 @functools.lru_cache(maxsize=_CACHE_SIZE)
 def _plan_cached(workload: Workload, budget: int, strategy: "Strategy | str",
                  controller: Controller, exact_iters: bool) -> Plan:
-    schedule = get_planner(strategy)(workload, budget, controller)
-    report = traffic_report(workload, schedule, exact_iters=exact_iters)
-    return Plan(workload=workload, budget=budget, schedule=schedule,
-                traffic=report)
+    with span("plan", cat="plan", workload=workload.name or "shape",
+              strategy=(strategy.value if isinstance(strategy, Strategy)
+                        else str(strategy)),
+              controller=controller.value):
+        schedule = get_planner(strategy)(workload, budget, controller)
+        report = traffic_report(workload, schedule, exact_iters=exact_iters)
+        return Plan(workload=workload, budget=budget, schedule=schedule,
+                    traffic=report)
+
+
+# ``plan()``'s LRU statistics, sampled straight off the lru_cache at
+# metric-collection time (callback gauges — no bookkeeping on the hot path).
+for _field in ("hits", "misses", "currsize"):
+    REGISTRY.gauge("plan_cache", "plan() LRU statistics",
+                   labels={"field": _field},
+                   fn=(lambda f=_field:
+                       float(getattr(_plan_cached.cache_info(), f))))
+del _field
 
 
 def plan(workload: Workload, budget: int | None = None,

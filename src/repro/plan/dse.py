@@ -28,11 +28,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.obs.trace import Stopwatch
 from repro.plan import conv_model, gemm_model
 from repro.plan.objectives import Objective, get_objective, register_objective
 from repro.plan.schedule import Controller, Schedule, Strategy
@@ -366,10 +366,10 @@ def sweep(networks, budgets, strategies=("paper_opt",),
                     # us_per_call times the planning itself (comparable to
                     # the pre-DSE _timed() benchmark rows); the objective
                     # re-scoring below is reporting, not planning.
-                    t0 = time.perf_counter()
-                    plans = api.plan_many(wls, budget, strat, ctrl,
-                                          exact_iters=exact)
-                    us = (time.perf_counter() - t0) * 1e6
+                    with Stopwatch() as sw:
+                        plans = api.plan_many(wls, budget, strat, ctrl,
+                                              exact_iters=exact)
+                    us = sw.us
                     costs = [
                         float(obj_fn(p.workload,
                                      Candidates.single(p.schedule.kind,

@@ -34,6 +34,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs.trace import span
 from repro.plan import api as _api
 from repro.plan import netplan as _np
 from repro.plan.graph import NetworkGraph
@@ -82,6 +83,16 @@ def plan_graphs(graphs, budget: int | None = None,
     sim_obj = _np._resolve_sim_objective(strategy, objective)
 
     coerced = [ctx.graph_of(g) for g in graphs]
+    with span("fleet.plan_graphs", cat="plan", nets=len(coerced),
+              controller=controller.value):
+        return _plan_graphs_batched(coerced, budget, strategy, controller,
+                                    residency_bytes, beam_width, objective,
+                                    checked, ctx, sim_obj)
+
+
+def _plan_graphs_batched(coerced, budget, strategy, controller,
+                         residency_bytes, beam_width, objective,
+                         checked, ctx, sim_obj) -> list[NetPlan]:
     results: "list[NetPlan | None]" = [None] * len(coerced)
     lanes: dict[tuple, _Lane] = {}
     for pos, graph in enumerate(coerced):
@@ -145,7 +156,10 @@ def plan_graphs(graphs, budget: int | None = None,
                 lane.beam.advance(step, node, scores)
                 continue
             ctx.stats["fleet_bucketed_steps"] += 1
-            cat = grid.score_frontier(np.concatenate(spills))
+            joint = np.concatenate(spills)
+            with span("fleet.bucket_step", cat="plan", step=step,
+                      lanes=len(group), states=len(joint)):
+                cat = grid.score_frontier(joint)
             off = 0
             for (lane, node, _), sp in zip(group, spills):
                 sl = tuple(a[off:off + len(sp)] for a in cat)

@@ -55,6 +55,8 @@ from typing import Any, NamedTuple
 
 import numpy as np
 
+from repro.obs.metrics import REGISTRY, StatsCounter
+from repro.obs.trace import span
 from repro.plan import api as _api
 from repro.plan import conv_model, dse, gemm_model
 from repro.plan.graph import NetworkGraph, Node
@@ -101,7 +103,9 @@ class PlanContext:
         self.grids: dict = {}       # grid key -> _NodeGrid | _SimNodeGrid
         self.scheds: dict = {}      # baseline key -> (Schedule, TrafficReport)
         self.reports: dict = {}     # bus-report key -> TrafficReport
-        self.stats: collections.Counter = collections.Counter()
+        # A Counter to every caller; each increment also rolls up into the
+        # process-wide ``plan_context_stats{key=...}`` obs metrics.
+        self.stats: collections.Counter = StatsCounter()
         self._shapes: dict = {}     # workload -> name-stripped workload
         self._graphs: dict = {}     # zoo CNN name -> NetworkGraph
 
@@ -279,9 +283,12 @@ class _SimNodeGrid:
         if self.stats is not None:
             self.stats["sim_batch_calls"] += 1
         vec = np.asarray(missing, dtype=np.int64)
-        res = self.objective.batch(self.wl, self.cands, self.controller,
-                                   spilled_in_words=vec,
-                                   out_spilled=out_spilled)
+        with span("sim.eval_batch", cat="plan", node=self.wl.name or "shape",
+                  states=len(missing), candidates=len(self.cands),
+                  out_spilled=out_spilled):
+            res = self.objective.batch(self.wl, self.cands, self.controller,
+                                       spilled_in_words=vec,
+                                       out_spilled=out_spilled)
         cost = np.asarray(res.metric(self.objective.metric), dtype=np.float64)
         if cost.ndim == 1:      # spill-independent metric: every row equal
             cost = np.broadcast_to(cost, (len(missing), cost.size))
@@ -796,7 +803,17 @@ class PlanGraphCacheInfo(NamedTuple):
 _GRAPH_CACHE: "collections.OrderedDict[tuple, tuple[NetPlan, Any]]" = \
     collections.OrderedDict()
 _GRAPH_CACHE_MAXSIZE = 128
-_GRAPH_CACHE_STATS = {"hits": 0, "misses": 0}
+# Hit/miss counts live in the obs registry (``plan_graph_cache{event=...}``)
+# so the planner service and the CLI expose them without private imports;
+# `plan_graph_cache_info` reads them back bit-compatibly.
+_CACHE_HITS = REGISTRY.counter("plan_graph_cache",
+                               "plan_graph LRU lookups by outcome",
+                               labels={"event": "hits"})
+_CACHE_MISSES = REGISTRY.counter("plan_graph_cache",
+                                 "plan_graph LRU lookups by outcome",
+                                 labels={"event": "misses"})
+REGISTRY.gauge("plan_graph_cache_size", "entries in the plan_graph LRU",
+               fn=lambda: float(len(_GRAPH_CACHE)))
 
 
 def _graph_signature(graph: NetworkGraph) -> tuple:
@@ -830,10 +847,10 @@ def _cache_key(graph: NetworkGraph, budget, strategy,
 def _cache_get(key: tuple) -> "NetPlan | None":
     entry = _GRAPH_CACHE.get(key)
     if entry is None:
-        _GRAPH_CACHE_STATS["misses"] += 1
+        _CACHE_MISSES.inc()
         return None
     _GRAPH_CACHE.move_to_end(key)
-    _GRAPH_CACHE_STATS["hits"] += 1
+    _CACHE_HITS.inc()
     return entry[0]
 
 
@@ -846,15 +863,16 @@ def _cache_put(key: tuple, netp: NetPlan, objective) -> None:
 
 def plan_graph_cache_info() -> PlanGraphCacheInfo:
     """``plan()``-style cache statistics for the graph-level plan cache."""
-    return PlanGraphCacheInfo(hits=_GRAPH_CACHE_STATS["hits"],
-                              misses=_GRAPH_CACHE_STATS["misses"],
+    return PlanGraphCacheInfo(hits=int(_CACHE_HITS.value),
+                              misses=int(_CACHE_MISSES.value),
                               maxsize=_GRAPH_CACHE_MAXSIZE,
                               currsize=len(_GRAPH_CACHE))
 
 
 def clear_plan_graph_cache() -> None:
     _GRAPH_CACHE.clear()
-    _GRAPH_CACHE_STATS["hits"] = _GRAPH_CACHE_STATS["misses"] = 0
+    _CACHE_HITS.reset()
+    _CACHE_MISSES.reset()
 
 
 # ------------------------------------------------------------------ planning
@@ -896,16 +914,23 @@ def plan_graph(graph_or_name, budget: int | None = None,
     graph = _coerce_graph(graph_or_name)
     strategy = _api.coerce_strategy(strategy)
     controller = Controller.coerce(controller)
-    key = _cache_key(graph, budget, strategy, controller, residency_bytes,
-                     beam_width, objective)
-    hit = _cache_get(key)
-    if hit is not None:
-        return _verified(hit, checked)
-    ctx = PlanContext() if context is None else context
-    netp = _plan_graph_uncached(graph, budget, strategy, controller,
-                                residency_bytes, beam_width, objective, ctx)
-    _cache_put(key, netp, objective)
-    return _verified(netp, checked)
+    with span("plan_graph", cat="plan", graph=graph.name,
+              strategy=(strategy.value if isinstance(strategy, Strategy)
+                        else str(strategy)),
+              controller=controller.value) as sp:
+        key = _cache_key(graph, budget, strategy, controller,
+                         residency_bytes, beam_width, objective)
+        hit = _cache_get(key)
+        if hit is not None:
+            sp.set("cache", "hit")
+            return _verified(hit, checked)
+        sp.set("cache", "miss")
+        ctx = PlanContext() if context is None else context
+        netp = _plan_graph_uncached(graph, budget, strategy, controller,
+                                    residency_bytes, beam_width, objective,
+                                    ctx)
+        _cache_put(key, netp, objective)
+        return _verified(netp, checked)
 
 
 def _plan_graph_uncached(graph: NetworkGraph, budget, strategy,

@@ -38,6 +38,10 @@ class Phase:
     row_hits: int
     row_misses: int
     bank_conflicts: int
+    # Which node of a merged network report this phase came from ("" for a
+    # single-workload report) — `merge_reports` stamps it so the Perfetto
+    # timeline and `summary()` stay attributable per layer.
+    node: str = ""
 
     @property
     def cycles_per_epoch(self) -> float:
@@ -135,20 +139,49 @@ class SimReport:
             + " ".join(f"{k}={v / 1e6:.3f}" for k, v in
                        self.energy_breakdown.items()),
         ]
+        nodes = self.node_breakdown()
+        if len(nodes) > 1:
+            lines.append(f"{'node':<24}{'cycles':>12}{'bus words':>14}")
+            for node, (cyc, words) in nodes.items():
+                lines.append(f"{node:<24}{cyc:>12.3e}{words:>14.3e}")
         return "\n".join(lines)
+
+    def node_breakdown(self) -> "dict[str, tuple[float, float]]":
+        """Per-node (cycles, interconnect words), in phase order — the
+        provenance `merge_reports` stamps on each phase (single-workload
+        reports collapse to one entry under their own name)."""
+        out: dict[str, tuple[float, float]] = {}
+        for p in self.phases:
+            node = p.node or self.name
+            cyc, words = out.get(node, (0.0, 0.0))
+            out[node] = (cyc + p.cycles, words + p.interconnect_words)
+        return out
+
+
+def _stamp_node(phase: Phase, node: str) -> Phase:
+    """Phase provenance for a merged report: carry the owning node's name
+    and make the phase name globally unique by prefixing it (the engine
+    already names phases ``{layer}/{epoch}``, so an existing prefix is
+    kept rather than doubled)."""
+    name = phase.name if phase.name.startswith(f"{node}/") \
+        else f"{node}/{phase.name}"
+    return dataclasses.replace(phase, name=name, node=node)
 
 
 def merge_reports(name: str, controller: Controller, params: SimParams,
                   reports: "list[SimReport]") -> SimReport:
     """Concatenate per-node reports into one network report (nodes execute
-    sequentially: cycles add, counters add, phases chain)."""
+    sequentially: cycles add, counters add, phases chain). Each phase is
+    stamped with the node it came from (`Phase.node`), so the merged
+    timeline stays attributable per layer."""
     breakdown: dict[str, float] = {}
     for r in reports:
         for k, v in r.energy_breakdown.items():
             breakdown[k] = breakdown.get(k, 0.0) + v
     return SimReport(
         name=name, controller=controller, params=params,
-        phases=tuple(p for r in reports for p in r.phases),
+        phases=tuple(_stamp_node(p, r.name) for r in reports
+                     for p in r.phases),
         interconnect_words=sum(r.interconnect_words for r in reports),
         input_words=sum(r.input_words for r in reports),
         output_words=sum(r.output_words for r in reports),

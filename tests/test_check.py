@@ -397,7 +397,22 @@ def test_repo_is_lint_clean():
 def test_lint_rules_load_from_tools():
     rules = rlint.load_rules()
     assert {r.code for r in rules} == {"RPL100", "RPL101", "RPL102",
-                                       "RPL103", "RPL110"}
+                                       "RPL103", "RPL104", "RPL110"}
+
+
+def test_rpl104_adhoc_wall_timing():
+    got = _lint_src("t0 = time.perf_counter()\n")
+    assert _codes(got) == {"RPL104"} and got[0].line == 1
+    assert _codes(_lint_src("dt = monotonic_ns() - t0\n")) == {"RPL104"}
+    # the sanctioned homes: the tracer itself, benchmarks, planserve
+    assert _lint_src("t0 = time.perf_counter()\n",
+                     rel="src/repro/obs/trace.py") == []
+    assert _lint_src("t0 = time.perf_counter()\n",
+                     rel="benchmarks/run.py") == []
+    assert _lint_src("t0 = time.perf_counter()\n",
+                     rel="src/repro/launch/planserve.py") == []
+    # reading the module attribute without calling is not timing
+    assert _lint_src("f = time.perf_counter\n") == []
 
 
 # ------------------------------------------------ latent-violation pin

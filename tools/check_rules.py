@@ -22,14 +22,19 @@ RPL103  ``pl.pallas_call`` is invoked in exactly one place —
         ``repro.kernels.launch.run`` — so every kernel launch is a
         `LaunchPlan` the RPC04x dataflow analyzer can trace and certify.
         Only ``src/repro/kernels/`` may touch it.
+RPL104  raw wall-clock reads (``time.perf_counter`` and friends) live only
+        in ``repro.obs`` (the tracing primitives), ``benchmarks/`` (the
+        harnesses), and ``launch/planserve.py`` (the virtual-clock load
+        generator). Everywhere else measures via ``repro.obs.Stopwatch`` so
+        every timed interval can double as a trace span.
 RPL110  ``repro.core.bwmodel`` / ``repro.core.partitioner`` are deprecation
         shims; new code imports ``repro.plan``. Only the shim package itself
         may touch them.
 """
 
-from repro.check.lint import (cross_assign_rule, deprecated_import_rule,
-                              magic_energy_rule, raw_byte_arith_rule,
-                              raw_pallas_rule)
+from repro.check.lint import (adhoc_timing_rule, cross_assign_rule,
+                              deprecated_import_rule, magic_energy_rule,
+                              raw_byte_arith_rule, raw_pallas_rule)
 
 #: modules allowed to convert words -> bytes
 BYTE_MODEL_MODULES = (
@@ -43,6 +48,7 @@ BYTE_MODEL_MODULES = (
     "src/repro/sim/*",                 # the simulator prices bytes
     "src/repro/roofline/*",            # roofline is a bytes/s model
     "src/repro/check/*",               # the verifier recomputes conversions
+    "src/repro/obs/export.py",         # GB/s counter track derivation
 )
 
 RULES = [
@@ -50,5 +56,7 @@ RULES = [
     magic_energy_rule(("src/repro/roofline/constants.py",)),
     cross_assign_rule(),
     raw_pallas_rule(("src/repro/kernels/*",)),
+    adhoc_timing_rule(("src/repro/obs/*", "benchmarks/*",
+                       "src/repro/launch/planserve.py")),
     deprecated_import_rule(("src/repro/core/*",)),
 ]
