@@ -386,6 +386,42 @@ def obs_rows(smoke: bool = False) -> list[str]:
     ]
 
 
+def faults_rows(smoke: bool = False) -> list[str]:
+    """Fault-injection / graceful-degradation rows (`repro.faults.chaos`).
+
+    One 50-schedule seeded chaos run over the zoo + hardened planner
+    service. Every row is deterministic (seeded draws + the virtual
+    service-time model), so all counts are ``exact``-guarded except the
+    ``availability_*`` rows, which use the floor-ratchet ``availability``
+    class in ``run.py check`` (fresh must be >= committed — the service may
+    only get more available). The invariant rows (violations, word drift,
+    replan mismatches, check diags) must be exactly 0.
+
+    Committed as ``BENCH_faults.json`` (``run.py faults --json``)."""
+    from repro.faults import run_chaos
+
+    scope = "zoo2" if smoke else "zoo"
+    (rep, us) = _timed(lambda: run_chaos(50, smoke=smoke))
+    shed_rate = 100.0 * rep.sheds / rep.requests if rep.requests else 0.0
+    return [
+        f"faults/{scope}/schedules,{us:.0f},{rep.schedules}",
+        f"faults/{scope}/fault_events,0,{rep.fault_events}",
+        f"faults/{scope}/invariant_violations,0,{len(rep.violations)}",
+        f"faults/{scope}/word_drift,0,{rep.word_drift}",
+        f"faults/{scope}/replan_mismatches,0,{rep.replan_mismatches}",
+        f"faults/{scope}/check_diags,0,{rep.check_diagnostics}",
+        f"faults/{scope}/availability_floor_pct,0"
+        f",{rep.availability_min_pct:.2f}",
+        f"faults/{scope}/availability_mean_pct,0"
+        f",{rep.availability_mean_pct:.2f}",
+        f"faults/{scope}/degraded_p99_virtual_ms,0"
+        f",{rep.degraded_p99_max_ms:.3f}",
+        f"faults/{scope}/shed_rate_pct,0,{shed_rate:.3f}",
+        f"faults/{scope}/retries,0,{rep.retries}",
+        f"faults/{scope}/breaker_opens,0,{rep.breaker_opens}",
+    ]
+
+
 def dse_pareto() -> list[str]:
     """Budget-vs-traffic Pareto frontier (exact search, active controller):
     the MAC budgets that actually buy bandwidth, per CNN."""

@@ -40,6 +40,12 @@ trajectories can be recorded as ``BENCH_*.json`` artifacts. Sections:
             ratio, Perfetto export wall time, and the zoo word-for-word
             trace pins (with --json, written to BENCH_obs.json and guarded
             by ``check``)
+  faults  — fault injection / graceful degradation (repro.faults): one
+            50-schedule seeded chaos run over the zoo + hardened planner
+            service — invariant counts (must be 0), availability floor/mean
+            (floor-ratchet ``availability`` class), degraded-mode p99 and
+            shed rate on the virtual clock (with --json, written to
+            BENCH_faults.json and guarded by ``check``)
   kernels — VMEM-level active/passive traffic + interpret timings
 
 Usage: python benchmarks/run.py [section] [--json] [--smoke]
@@ -86,7 +92,8 @@ ARTIFACTS = {"netplan": "BENCH_netplan.json", "sim": "BENCH_sim.json",
              "planserve": "BENCH_planserve.json",
              "check-plans": "BENCH_check.json",
              "check-dataflow": "BENCH_check.json",
-             "obs": "BENCH_obs.json"}
+             "obs": "BENCH_obs.json",
+             "faults": "BENCH_faults.json"}
 
 # ``check`` tolerance classes. Every ``derived`` value in the committed
 # artifacts is a deterministic model output (word counts, simulated
@@ -107,6 +114,8 @@ DEFAULT_CHECK_TOL = 0.20
 def _metric_class(name: str) -> str:
     if name.endswith("/disabled_overhead"):
         return "overhead"                     # hard <= 1.05 acceptance bound
+    if "availability" in name:
+        return "availability"                 # deterministic floor ratchet
     if "speedup" in name or "plans_per_s" in name:
         return "speedup"                      # wall-clock ratio: floor
     if (name.endswith("/p50_ms") or name.endswith("/p99_ms")
@@ -136,6 +145,10 @@ def check_benchmarks(sections: dict, tol: float = DEFAULT_CHECK_TOL) -> int:
             cls = _metric_class(rname)
             if cls == "exact":
                 ok = new["derived"] == old["derived"]
+            elif cls == "availability":
+                # Deterministic virtual-clock availability: a ratchet, the
+                # fresh value may only meet or beat the committed floor.
+                ok = new["derived"] >= old["derived"]
             elif cls == "latency":
                 ok = new["derived"] <= old["derived"] / tol
             elif cls == "overhead":
@@ -188,6 +201,7 @@ def main(argv: list[str] | None = None) -> None:
         "check-dataflow": functools.partial(paper_tables.check_dataflow_rows,
                                             smoke=smoke),
         "obs": functools.partial(paper_tables.obs_rows, smoke=smoke),
+        "faults": functools.partial(paper_tables.faults_rows, smoke=smoke),
         "kernel_traffic": kernel_traffic.traffic_rows,
         "kernel_interpret": kernel_traffic.interpret_rows,
     }

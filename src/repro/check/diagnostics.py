@@ -188,6 +188,11 @@ _register("RPL104", "adhoc-wall-timing", Severity.ERROR,
           "benchmarks",
           "measure through repro.obs.Stopwatch (or a span) so the interval "
           "is also visible to the tracer")
+_register("RPL105", "bare-except", Severity.ERROR,
+          "bare `except:` or `except Exception: pass` under src/repro "
+          "swallows faults the degradation layer must dispatch on",
+          "catch a typed repro.errors exception (PlanError, BudgetError, "
+          "DeadlineExceeded, Shed) or re-raise")
 _register("RPL110", "deprecated-import", Severity.WARNING,
           "import of the deprecated core.bwmodel / core.partitioner shims",
           "import from repro.plan (conv_model / gemm_model) instead")

@@ -229,6 +229,55 @@ def adhoc_timing_rule(
     return LintRule("RPL104", _visit_adhoc_timing, tuple(allowed))
 
 
+# --------------------------------------------------------------- RPL105
+#: where swallowed exceptions are tolerable: harnesses and scripts, not the
+#: library — `bare_except_rule` exempts these so RPL105 governs src/repro
+NON_LIBRARY_CODE = ("benchmarks/*", "examples/*", "tools/*")
+
+
+def _noop_body(body: Sequence[ast.stmt]) -> bool:
+    """True when a handler body does nothing: only pass / ... / a string."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant) \
+                and (isinstance(stmt.value.value, str)
+                     or stmt.value.value is Ellipsis):
+            continue
+        return False
+    return True
+
+
+def _visit_bare_except(tree: ast.Module, rel: str) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            out.append(Diagnostic(
+                "RPL105", rel,
+                "bare `except:` swallows every failure — catch a typed "
+                "repro.errors exception (or re-raise)",
+                file=rel, line=node.lineno))
+            continue
+        caught = (node.type.elts if isinstance(node.type, ast.Tuple)
+                  else [node.type])
+        broad = any(_name_of(c) in ("Exception", "BaseException")
+                    for c in caught)
+        if broad and _noop_body(node.body):
+            out.append(Diagnostic(
+                "RPL105", rel,
+                "`except Exception: pass` silently swallows faults — handle "
+                "a typed repro.errors exception or re-raise",
+                file=rel, line=node.lineno))
+    return out
+
+
+def bare_except_rule(
+        allowed: Sequence[str] = NON_LIBRARY_CODE) -> LintRule:
+    return LintRule("RPL105", _visit_bare_except, tuple(allowed))
+
+
 # --------------------------------------------------------------- RPL110
 def _visit_deprecated_import(tree: ast.Module, rel: str) -> List[Diagnostic]:
     out: List[Diagnostic] = []
@@ -260,7 +309,8 @@ def deprecated_import_rule(
 
 def default_rules() -> List[LintRule]:
     return [raw_byte_arith_rule(), magic_energy_rule(), cross_assign_rule(),
-            raw_pallas_rule(), adhoc_timing_rule(), deprecated_import_rule()]
+            raw_pallas_rule(), adhoc_timing_rule(), bare_except_rule(),
+            deprecated_import_rule()]
 
 
 # ----------------------------------------------------------------- driver

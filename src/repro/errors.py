@@ -1,0 +1,70 @@
+"""`repro.errors` — the typed exception hierarchy for the plan→sim→serve stack.
+
+Every failure the planner service must *dispatch on* gets its own type, so
+retry / load-shedding / degradation policy is written as ``except
+BudgetError`` rather than string-matching a bare ``ValueError``:
+
+  * `PlanError` — planning failed (bad objective, unknown strategy, malformed
+    request). Subclasses `ValueError` so pre-existing ``except ValueError``
+    call sites (and the test suite's ``pytest.raises(ValueError)`` pins) keep
+    working across the migration.
+  * `BudgetError` — the specific, *retryable* planning failure: no feasible
+    candidate under the current MAC/VMEM/residency budget. A degraded engine
+    shrinking ``P`` turns healthy requests into `BudgetError`\\ s, which the
+    hardened `PlanServer` answers by re-planning under the degraded budget
+    (``NetPlan.replan``) instead of failing the request.
+  * `DeadlineExceeded` — a request's virtual-clock deadline passed before
+    service completed (or before it started: expired-in-queue requests are
+    dropped without wasting planner work). Subclasses `TimeoutError`.
+  * `Shed` — the bounded admission queue rejected the request outright
+    (overload protection). Sheds are deliberate and cheap; they must never be
+    retried by the layer that raised them.
+  * `InvariantViolation` — a chaos-harness invariant failed (word-count
+    drift, replan parity break, availability floor breach). Raised by
+    ``repro.faults.chaos`` when asked to enforce rather than count.
+
+The lint rule RPL105 (``tools/check_rules.py``) forbids bare ``except:`` /
+``except Exception: pass`` under ``src/repro/`` — fault handling must name
+one of these types (or re-raise), never swallow.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "ReproError", "PlanError", "BudgetError", "DeadlineExceeded", "Shed",
+    "InvariantViolation",
+]
+
+
+class ReproError(Exception):
+    """Root of the repo's typed exception hierarchy."""
+
+
+class PlanError(ReproError, ValueError):
+    """Planning failed: malformed request, unknown strategy/objective, or an
+    internally inconsistent plan. `ValueError` for backward compatibility."""
+
+
+class BudgetError(PlanError):
+    """No feasible schedule under the current MAC/VMEM/residency budget.
+
+    The retryable planning failure: the caller can re-plan under a degraded
+    budget (``NetPlan.replan``) or shed the request, but the search itself is
+    not at fault."""
+
+
+class DeadlineExceeded(ReproError, TimeoutError):
+    """A request's deadline passed before (or during) service."""
+
+    def __init__(self, message: str = "", *, lateness_s: float = 0.0):
+        super().__init__(message or f"deadline exceeded by {lateness_s:.4f}s")
+        self.lateness_s = lateness_s
+
+
+class Shed(ReproError, RuntimeError):
+    """Admission control rejected the request (bounded queue overflow)."""
+
+
+class InvariantViolation(ReproError, AssertionError):
+    """A fault-injection invariant failed: word-count drift under faults,
+    replan/fresh-plan divergence, or an availability-floor breach."""

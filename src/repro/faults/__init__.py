@@ -1,0 +1,42 @@
+"""`repro.faults` — deterministic fault injection and graceful degradation.
+
+The robustness layer of the plan→sim→serve stack (ROADMAP item 5's "engine
+failures" scenario): a typed fault taxonomy (`models`), seeded reproducible
+fault schedules and degraded re-planning (`inject`), and a chaos harness
+(`chaos`) that drives randomized schedules through the zoo and the hardened
+planner service while asserting the stack's invariants — word counts never
+drift under machine faults, degraded re-planning is bit-for-bit a fresh
+plan, every surviving plan passes `repro.check`, and service availability
+stays above the committed floor.
+
+    from repro import faults
+
+    sched = faults.generate_schedule(seed=7)
+    rep = netp.simulate()                       # healthy timing
+    hurt = sim.simulate_network(netp, faults=sched.sim_faults())
+    hurt.as_traffic_report() == rep.as_traffic_report()   # words: invariant
+    degraded = faults.apply_to_plan(netp, sched.plan_faults())
+
+    python -m repro.faults --schedules 50 --smoke   # the chaos harness
+"""
+
+from repro.faults.chaos import (DEFAULT_AVAILABILITY_FLOOR_PCT, ChaosReport,
+                                run_chaos)
+from repro.faults.inject import (STORM_FACTORS, SURVIVING_FRACS,
+                                 THROTTLE_FACTORS, apply_to_plan,
+                                 degraded_plan_args, generate_schedule,
+                                 plan_args_of, storm_windows)
+from repro.faults.models import (ControllerFallback, DmaStall, DramThrottle,
+                                 EngineDegrade, Fault, FaultEvent,
+                                 FaultSchedule, PlanArgs, RequestStorm,
+                                 VmemShrink)
+
+__all__ = [
+    "Fault", "EngineDegrade", "VmemShrink", "DramThrottle",
+    "ControllerFallback", "DmaStall", "RequestStorm",
+    "FaultEvent", "FaultSchedule", "PlanArgs",
+    "generate_schedule", "degraded_plan_args", "plan_args_of",
+    "apply_to_plan", "storm_windows",
+    "SURVIVING_FRACS", "THROTTLE_FACTORS", "STORM_FACTORS",
+    "ChaosReport", "run_chaos", "DEFAULT_AVAILABILITY_FLOOR_PCT",
+]

@@ -1,0 +1,10 @@
+"""``python -m repro.faults`` — run the chaos harness from the CLI.
+
+Exits non-zero if any invariant is violated (word drift, replan divergence,
+check diagnostics, availability-floor breach); see `repro.faults.chaos`.
+"""
+
+from repro.faults.chaos import _main
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 
+from repro.errors import PlanError
 from repro.obs.metrics import REGISTRY
 from repro.obs.trace import span
 from repro.plan import conv_model
@@ -72,7 +73,7 @@ def coerce_strategy(value: "Strategy | str") -> "Strategy | str":
             import repro.sim  # noqa: F401  (registers the sim_* strategies)
         if value in PLANNERS:
             return value
-        raise ValueError(
+        raise PlanError(
             f"unknown strategy {value!r}; known: "
             f"{sorted(set([s.value for s in Strategy]) | set(PLANNERS))}"
         ) from None

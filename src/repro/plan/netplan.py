@@ -55,6 +55,7 @@ from typing import Any, NamedTuple
 
 import numpy as np
 
+from repro.errors import BudgetError, PlanError
 from repro.obs.metrics import REGISTRY, StatsCounter
 from repro.obs.trace import span
 from repro.plan import api as _api
@@ -225,7 +226,8 @@ def _node_candidates(wl, budget: int | None, strategy, controller: Controller):
     if not mask.any():
         fallback = getattr(spec.space, "fallback", None)
         if fallback is None:
-            raise ValueError(f"no feasible candidate for {wl!r} at {budget}")
+            raise BudgetError(
+                f"no feasible candidate for {wl!r} at {budget}")
         cands = fallback(wl, budget)
         mask = np.ones(len(cands), dtype=bool)
     return cands, mask, kind
@@ -360,7 +362,7 @@ def _resolve_sim_objective(strategy, objective):
         return obj
     if objective is None:       # custom "sim_"-named, non-sim strategy
         return None
-    raise ValueError(
+    raise PlanError(
         f"plan_graph objective {objective!r} is not a sim objective; pass "
         f"'sim_latency', 'sim_energy', a make_sim_objective(...) instance, "
         f"or 'interconnect_words' (the word-count default)")

@@ -11,24 +11,53 @@ them onto any new mesh's shardings.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from typing import TYPE_CHECKING
 
 from repro.checkpoint.store import CheckpointManager
+from repro.errors import BudgetError
 from repro.sharding import rules
 
+if TYPE_CHECKING:
+    from repro.faults.models import EngineDegrade
 
-def largest_healthy_mesh(n_devices: int, model_parallel: int):
-    """Given a surviving device count, build the biggest (data, model) mesh
-    that keeps the model-parallel degree (weights layouts stay valid) —
-    i.e. drop data-parallel replicas, never split the model differently."""
+
+def healthy_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """The (data, model) shape of the biggest healthy mesh: keep the
+    model-parallel degree (weights layouts stay valid), drop data-parallel
+    replicas — non-divisible survivors simply idle the remainder. Pure
+    arithmetic, shared by `largest_healthy_mesh` and the CPU-only tests.
+
+    Raises `repro.errors.BudgetError` when fewer devices survive than the
+    model-parallel degree needs — the un-servable degradation, the mesh
+    analogue of a plan's infeasible MAC budget."""
     if n_devices < model_parallel:
-        raise ValueError(f"need >= {model_parallel} devices for TP; have "
-                         f"{n_devices}")
-    data = n_devices // model_parallel
-    devices = jax.devices()[:data * model_parallel]
+        raise BudgetError(f"need >= {model_parallel} devices for TP; have "
+                          f"{n_devices}")
+    return n_devices // model_parallel, model_parallel
+
+
+def surviving_devices(degrade: "EngineDegrade", n_devices: int) -> int:
+    """How many devices an `EngineDegrade` fault leaves: its explicit
+    ``surviving_devices`` pin when given, else the floor of the surviving
+    fraction (at least one)."""
+    if degrade.surviving_devices is not None:
+        return min(int(degrade.surviving_devices), n_devices)
+    return max(1, int(n_devices * degrade.surviving_frac))
+
+
+def largest_healthy_mesh(n_devices: "int | EngineDegrade",
+                         model_parallel: int):
+    """Given a surviving device count — or the `repro.faults.EngineDegrade`
+    event that caused it, resolved against the visible device set — build
+    the biggest (data, model) mesh that keeps the model-parallel degree."""
+    import jax
+    from jax.sharding import AxisType
+    if not isinstance(n_devices, int):
+        n_devices = surviving_devices(n_devices, len(jax.devices()))
+    data, model = healthy_shape(n_devices, model_parallel)
+    devices = jax.devices()[:data * model]
     import numpy as np
-    arr = np.array(devices).reshape(data, model_parallel)
+    arr = np.array(devices).reshape(data, model)
     from jax.sharding import Mesh
     return Mesh(arr, ("data", "model"),
                 axis_types=(AxisType.Auto,) * 2)

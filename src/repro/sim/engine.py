@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import TYPE_CHECKING, Sequence
 
 from repro.plan.schedule import Controller, Schedule
 from repro.plan.workload import ConvWorkload, MatmulWorkload, Workload
@@ -38,7 +39,10 @@ from repro.sim.energy import energy_breakdown
 from repro.sim.params import DEFAULT_PARAMS, SimParams
 from repro.sim.report import Phase, SimReport
 
-__all__ = ["simulate"]
+if TYPE_CHECKING:
+    from repro.faults.models import Fault
+
+__all__ = ["simulate", "epoch_count"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,12 +286,71 @@ def _gemm_totals(wl: MatmulWorkload, schedule: Schedule, active: bool,
         sram_bytes=((gk - 1) * acc + gk * acc) * wl.acc_bytes)
 
 
+# ------------------------------------------------------- transient faults
+def _params_at(params: SimParams, faults: "Sequence[Fault]", epoch: int,
+               n_epochs: int) -> SimParams:
+    """``params`` with every fault whose window covers ``epoch`` applied, in
+    schedule order. Faults whose sim projection is the identity (plan- or
+    serve-level kinds) return ``params`` unchanged, object-identical."""
+    for f in faults:
+        lo, hi = f.window(n_epochs)
+        if lo <= epoch < hi:
+            params = f.apply_params(params)
+    return params
+
+
+def _faulted_phases(params: SimParams, faults: "Sequence[Fault]",
+                    epochs: "list[_Epoch]", layer: str,
+                    n_epochs: int) -> "list[Phase]":
+    """The epoch walk with transient fault windows threaded in.
+
+    Each epoch class spans a contiguous range of the global epoch index; the
+    range is cut at every fault-window boundary and each segment is costed
+    with the `SimParams` in force there. Segments whose params actually
+    changed are name-suffixed ``~fault`` so degraded time is attributable in
+    the timeline. Per-epoch word/row/conflict columns are unchanged by the
+    split (they only multiply by the count), so every word total — and, for
+    params-preserving faults, every second-order counter — is invariant.
+    """
+    bounds = sorted({b for f in faults for b in f.window(n_epochs)})
+    out: "list[Phase]" = []
+    base = 0
+    for ep in epochs:
+        lo, hi = base, base + ep.count
+        cuts = [lo] + [b for b in bounds if lo < b < hi] + [hi]
+        for a, b in zip(cuts, cuts[1:]):
+            seg_params = _params_at(params, faults, a, n_epochs)
+            phase = _epoch_phase(seg_params,
+                                 dataclasses.replace(ep, count=b - a), layer)
+            if seg_params is not params:
+                phase = dataclasses.replace(phase, name=phase.name + "~fault")
+            out.append(phase)
+        base = hi
+    return out
+
+
+def epoch_count(workload: Workload, schedule: Schedule) -> int:
+    """Total iteration epochs of one (workload, schedule) walk — the unit
+    fault windows are expressed in. Independent of residency (spill shares
+    scale words per epoch, never the epoch structure)."""
+    if isinstance(workload, ConvWorkload):
+        epochs = _conv_epochs(workload, schedule, False, workload.in_acts,
+                              True)
+    elif isinstance(workload, MatmulWorkload):
+        epochs = _gemm_epochs(workload, schedule, False,
+                              workload.m * workload.k, True)
+    else:
+        raise TypeError(f"unknown workload type {type(workload).__name__}")
+    return sum(ep.count for ep in epochs)
+
+
 # ------------------------------------------------------------------- simulate
 def simulate(workload: Workload, schedule: Schedule,
              params: SimParams | None = None, *,
              spilled_in_words: int | None = None,
              out_spilled: bool = True,
-             name: str | None = None, checked: bool = False) -> SimReport:
+             name: str | None = None, checked: bool = False,
+             faults: "Sequence[Fault] | None" = None) -> SimReport:
     """Simulate one (workload, schedule) pair on the modelled SoC.
 
     ``spilled_in_words`` is the share of the input words that must stream
@@ -295,6 +358,14 @@ def simulate(workload: Workload, schedule: Schedule,
     the network simulator passes the non-resident share). ``out_spilled=False``
     keeps the output/psum traffic in the engine-side residency buffer —
     the fused-edge convention of `repro.plan.netplan`.
+
+    ``faults`` injects transient machine faults (`repro.faults.models`): each
+    fault's ``[start_epoch, start_epoch + duration_epochs)`` window selects a
+    span of the iteration walk to cost under its degraded `SimParams`
+    transform. Faults change timing and energy only — the report's word
+    totals are computed from the workload/schedule arithmetic before any
+    fault is applied and are bit-for-bit the un-faulted totals (the chaos
+    harness and test suite pin this).
 
     Word totals are exact (the analytical model's arithmetic); timing is
     cycle-approximate (see module docstring). ``checked=True`` statically
@@ -333,11 +404,18 @@ def simulate(workload: Workload, schedule: Schedule,
         raise TypeError(f"unknown workload type {type(workload).__name__}")
 
     layer = name if name is not None else getattr(workload, "name", "workload")
+    faults = tuple(faults) if faults else ()
+    n_epochs = sum(ep.count for ep in epochs)
     phases: list[Phase] = []
-    fill = _fill_phase(params, epochs[0], layer)
+    fill = _fill_phase(_params_at(params, faults, 0, n_epochs), epochs[0],
+                       layer)
     if fill is not None:
         phases.append(fill)
-    phases.extend(_epoch_phase(params, ep, layer) for ep in epochs)
+    if faults:
+        phases.extend(_faulted_phases(params, faults, epochs, layer,
+                                      n_epochs))
+    else:
+        phases.extend(_epoch_phase(params, ep, layer) for ep in epochs)
 
     breakdown = energy_breakdown(
         interconnect_bytes=totals["interconnect_bytes"],

@@ -397,7 +397,8 @@ def test_repo_is_lint_clean():
 def test_lint_rules_load_from_tools():
     rules = rlint.load_rules()
     assert {r.code for r in rules} == {"RPL100", "RPL101", "RPL102",
-                                       "RPL103", "RPL104", "RPL110"}
+                                       "RPL103", "RPL104", "RPL105",
+                                       "RPL110"}
 
 
 def test_rpl104_adhoc_wall_timing():

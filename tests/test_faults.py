@@ -1,0 +1,352 @@
+"""Tests for `repro.faults` — fault injection and graceful degradation.
+
+Covers: the typed taxonomy (flags, validation, window/shift arithmetic),
+seeded schedule reproducibility, the simulator's word-count invariance under
+transient machine faults (timing/energy may move, words may not), the
+replan-after-fault ≡ fresh-plan property against the frozen
+`fleet.plan_graph_loop` oracle under both controllers, the elastic-mesh
+arithmetic consuming `EngineDegrade`, the `repro.errors` hierarchy, the
+hardened planner service (breaker, shedding, deadlines, retry/backoff,
+deterministic fault-load reports), a chaos-harness smoke run, and lint rule
+RPL105 (no bare/blanket-swallowed excepts under ``src/repro/``).
+"""
+
+import ast
+import dataclasses
+
+import pytest
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:   # optional dep: fall back to the vendored stub
+    from _hypothesis_stub import given, settings, st
+
+from repro import plan, sim
+from repro.check import lint as rlint
+from repro.check.diagnostics import CODES, Severity
+from repro.errors import (BudgetError, DeadlineExceeded, InvariantViolation,
+                          PlanError, ReproError, Shed)
+from repro.faults import (SURVIVING_FRACS, ControllerFallback, DmaStall,
+                          DramThrottle, EngineDegrade, Fault, FaultEvent,
+                          FaultSchedule, PlanArgs, RequestStorm, VmemShrink,
+                          apply_to_plan, degraded_plan_args,
+                          generate_schedule, plan_args_of, run_chaos,
+                          storm_windows)
+from repro.faults.chaos import _plan_equal
+from repro.launch.planserve import (PlanRequest, ResilientPlanServer,
+                                    ServerPolicy, run_fault_load)
+from repro.plan.fleet import plan_graph_loop
+from repro.plan.schedule import Controller
+from repro.sim.engine import epoch_count
+
+
+def _wl():
+    return plan.conv_workloads("alexnet")[2]
+
+
+# ---------------------------------------------------------------- taxonomy
+def test_fault_flags_partition_the_stack():
+    assert EngineDegrade().affects_sim and EngineDegrade().affects_plan
+    assert VmemShrink().affects_plan and not VmemShrink().affects_sim
+    assert DramThrottle().affects_sim and not DramThrottle().affects_plan
+    assert ControllerFallback().affects_plan
+    assert DmaStall().affects_sim
+    storm = RequestStorm()
+    assert storm.affects_serve and not (storm.affects_sim
+                                        or storm.affects_plan)
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        EngineDegrade(surviving_frac=0.0)
+    with pytest.raises(ValueError):
+        VmemShrink(surviving_frac=1.5)
+    with pytest.raises(ValueError):
+        DramThrottle(t_burst_factor=0.5)
+    with pytest.raises(ValueError):
+        RequestStorm(rate_factor=0.5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        DmaStall().start_epoch = 7
+    with pytest.raises(ValueError):   # events must be time-ordered
+        FaultSchedule(seed=0, horizon_s=1.0, events=(
+            FaultEvent(t_s=0.5, fault=DmaStall()),
+            FaultEvent(t_s=0.1, fault=DmaStall())))
+
+
+def test_window_and_shift_arithmetic():
+    f = DramThrottle(start_epoch=100, duration_epochs=50)
+    assert f.window(1000) == (100, 150)
+    assert f.window(120) == (100, 120)          # clipped to the walk
+    assert f.window(50) == (50, 50)             # entirely past the walk
+    assert DmaStall(start_epoch=10).window(40) == (10, 40)   # permanent
+    # shifting into an earlier frame consumes the elapsed duration: a fault
+    # at global epoch 5 lasting 10 covers local [0, 7) of a node whose walk
+    # starts at global epoch 8 — not a fresh [0, 10).
+    g = DramThrottle(start_epoch=5, duration_epochs=10).shifted(-8)
+    assert (g.start_epoch, g.duration_epochs) == (0, 7)
+    assert g.window(100) == (0, 7)
+    perm = DmaStall(start_epoch=5).shifted(-8)
+    assert perm.window(100) == (0, 100)         # permanent stays permanent
+    fwd = DramThrottle(start_epoch=5, duration_epochs=10).shifted(3)
+    assert fwd.window(100) == (8, 18)
+
+
+def test_schedules_are_seed_reproducible():
+    for seed in range(10):
+        a, b = generate_schedule(seed), generate_schedule(seed)
+        assert a == b and a.seed == seed
+        assert 1 <= len(a) <= 3
+        ts = [e.t_s for e in a]
+        assert ts == sorted(ts) and all(0.0 <= t < 1.0 for t in ts)
+        sim_f, plan_f = a.sim_faults(), a.plan_faults()
+        assert all(f.affects_sim for f in sim_f)
+        assert all(f.affects_plan for f in plan_f)
+        assert all(e.fault.affects_serve for e in a.storms())
+    assert any(generate_schedule(i) != generate_schedule(i + 1)
+               for i in range(5))
+
+
+def test_degraded_plan_args_fold():
+    base = PlanArgs(budget=None, residency_bytes=1 << 20,
+                    controller=Controller.ACTIVE)
+    # None budget resolves against the package default before shrinking
+    half = EngineDegrade(surviving_frac=0.5).apply_plan(base)
+    assert half.budget == plan.DEFAULT_P_MACS // 2
+    # degradations compound in injection order
+    out = degraded_plan_args(
+        [VmemShrink(surviving_frac=0.5), VmemShrink(surviving_frac=0.5),
+         ControllerFallback(), DramThrottle()], base)
+    assert out.residency_bytes == (1 << 20) // 4
+    assert out.controller is Controller.PASSIVE
+    assert out.budget is None                   # sim-only fault left it alone
+
+
+# ------------------------------------------------- sim: words are invariant
+def test_sim_faults_change_timing_never_words():
+    wl = _wl()
+    p = plan.plan(wl, 2048, "exact_opt", "active")
+    clean = sim.simulate(wl, p.schedule)
+    for fault in (EngineDegrade(surviving_frac=0.25),
+                  DramThrottle(t_burst_factor=4.0, row_buffer_disabled=True),
+                  DmaStall()):
+        hurt = sim.simulate(wl, p.schedule, faults=[fault])
+        assert hurt.as_traffic_report() == clean.as_traffic_report()
+        assert hurt.cycles >= clean.cycles
+    # a throttle that slows fetches must actually cost time
+    slow = sim.simulate(wl, p.schedule,
+                        faults=[DramThrottle(t_burst_factor=4.0)])
+    assert slow.cycles > clean.cycles
+
+
+def test_transient_fault_splits_epochs_at_the_window():
+    wl = _wl()
+    p = plan.plan(wl, 2048, "exact_opt", "active")
+    n = epoch_count(wl, p.schedule)
+    assert n > 8
+    fault = DramThrottle(t_burst_factor=4.0, start_epoch=n // 4,
+                         duration_epochs=n // 2)
+    rep = sim.simulate(wl, p.schedule, faults=[fault])
+    names = [ph.name for ph in rep.phases]
+    assert any(nm.endswith("~fault") for nm in names)
+    assert any(not nm.endswith("~fault") for nm in names)
+    clean = sim.simulate(wl, p.schedule)
+    assert rep.as_traffic_report() == clean.as_traffic_report()
+    assert clean.cycles <= rep.cycles
+    # whole-window fault == transform applied to every epoch
+    full = sim.simulate(wl, p.schedule,
+                        faults=[DramThrottle(t_burst_factor=4.0)])
+    part = sim.simulate(wl, p.schedule, faults=[fault])
+    assert clean.cycles < part.cycles < full.cycles
+
+
+def test_plan_only_faults_are_sim_inert():
+    wl = _wl()
+    p = plan.plan(wl, 2048, "exact_opt", "active")
+    clean = sim.simulate(wl, p.schedule)
+    inert = sim.simulate(wl, p.schedule,
+                         faults=[VmemShrink(), ControllerFallback(),
+                                 RequestStorm()])
+    assert inert == clean
+
+
+def test_network_sim_word_invariance_over_seeded_schedules():
+    netp = plan.plan_graph("alexnet", 2048, "exact_opt", "active")
+    clean = sim.simulate_network(netp)
+    for seed in range(4):
+        faults = generate_schedule(seed).sim_faults()
+        hurt = sim.simulate_network(netp, faults=faults)
+        assert hurt.as_traffic_report() == clean.as_traffic_report()
+        assert hurt.cycles >= clean.cycles
+
+
+# ------------------------------------- replan-after-fault ≡ fresh plan
+@settings(max_examples=10, deadline=None)
+@given(frac=st.sampled_from(SURVIVING_FRACS),
+       vfrac=st.sampled_from(SURVIVING_FRACS),
+       fallback=st.booleans(),
+       ctrl=st.sampled_from(["active", "passive"]))
+def test_replan_after_fault_matches_fresh_plan(frac, vfrac, fallback, ctrl):
+    """The degradation path is bit-for-bit a fresh plan under the degraded
+    parameters — pinned against the frozen cache-bypassing loop planner."""
+    base = plan.plan_graph("alexnet", 2048, "exact_opt", ctrl)
+    faults = [EngineDegrade(surviving_frac=frac),
+              VmemShrink(surviving_frac=vfrac)]
+    if fallback:
+        faults.append(ControllerFallback())
+    degraded = apply_to_plan(base, faults)
+    args = degraded_plan_args(faults, plan_args_of(base))
+    oracle = plan_graph_loop("alexnet", args.budget, base.strategy,
+                             args.controller, args.residency_bytes,
+                             base.beam_width)
+    assert _plan_equal(degraded, oracle)
+    assert degraded.budget == args.budget
+    assert degraded.controller is args.controller
+
+
+def test_apply_to_plan_noop_returns_same_object():
+    base = plan.plan_graph("alexnet", 2048, "exact_opt", "active")
+    assert apply_to_plan(base, [DramThrottle(), DmaStall()]) is base
+    # active→active fallback is parameter-identical too
+    assert apply_to_plan(
+        base, [ControllerFallback(to=Controller.ACTIVE)]) is base
+
+
+# ----------------------------------------------------- elastic re-meshing
+def test_elastic_healthy_shape_non_divisible():
+    from repro.runtime.elastic import healthy_shape, surviving_devices
+    assert healthy_shape(8, 4) == (2, 4)
+    assert healthy_shape(7, 2) == (3, 2)        # odd survivor idles one
+    assert healthy_shape(5, 4) == (1, 4)
+    assert healthy_shape(4, 4) == (1, 4)
+    with pytest.raises(BudgetError):
+        healthy_shape(3, 4)                     # un-servable degradation
+    assert surviving_devices(EngineDegrade(surviving_frac=0.75), 6) == 4
+    assert surviving_devices(EngineDegrade(surviving_frac=0.25), 2) == 1
+    assert surviving_devices(
+        EngineDegrade(surviving_devices=3), 8) == 3
+    assert surviving_devices(
+        EngineDegrade(surviving_devices=12), 8) == 8   # capped at fleet
+
+
+# ------------------------------------------------------------ repro.errors
+def test_error_hierarchy_dispatches_as_stdlib_types():
+    assert issubclass(PlanError, ValueError)
+    assert issubclass(BudgetError, PlanError)
+    assert issubclass(DeadlineExceeded, TimeoutError)
+    assert issubclass(Shed, RuntimeError)
+    assert issubclass(InvariantViolation, AssertionError)
+    for exc in (PlanError, BudgetError, DeadlineExceeded, Shed,
+                InvariantViolation):
+        assert issubclass(exc, ReproError)
+    assert DeadlineExceeded("late", lateness_s=0.25).lateness_s == 0.25
+    # the planner actually raises the typed forms (and, because PlanError
+    # is a ValueError, pre-hierarchy callers keep working)
+    with pytest.raises(PlanError):
+        plan.plan(_wl(), 2048, "no_such_strategy", "active")
+    with pytest.raises(ValueError):
+        plan.plan_graph("alexnet", 2048, objective="no_such_objective")
+
+
+# --------------------------------------------------------- hardened server
+def test_breaker_opens_on_engine_degrade_and_degrades_requests():
+    srv = ResilientPlanServer(seed=0)
+    req = PlanRequest(graph="alexnet", controller="active",
+                      objective="sim_latency")
+    srv.inject(EngineDegrade(surviving_frac=0.5), now_s=0.0)
+    assert srv.breaker_open and srv.breaker_opens == 1
+    deg = srv.degraded_request(req)
+    assert deg.budget == plan.DEFAULT_P_MACS // 2
+    assert deg.objective is None                # words mode under the breaker
+    # cooldown alone cannot close it while the engine fault is active
+    srv.maybe_close_breaker(now_s=10.0, backlog=0)
+    assert srv.breaker_open
+    srv.active_faults.clear()
+    srv.maybe_close_breaker(now_s=10.0, backlog=0)
+    assert not srv.breaker_open and srv.mode_switches == 2
+    assert srv.degraded_request(req).objective == "sim_latency"
+
+
+def test_virtual_service_and_backoff_models():
+    pol = ServerPolicy()
+    srv = ResilientPlanServer(pol, seed=3)
+    healthy = srv.virtual_service_s(8)
+    srv.open_breaker(0.0, reason="test")
+    assert srv.virtual_service_s(8) < healthy   # words mode is cheaper
+    b = [srv.backoff_s(a) for a in range(3)]
+    assert all(x > 0 for x in b)
+    assert b[2] > b[0]                          # exponential despite jitter
+    x = ResilientPlanServer(pol, seed=5)        # and seeded-reproducible
+    y = ResilientPlanServer(pol, seed=5)
+    assert [x.backoff_s(a) for a in range(4)] == \
+           [y.backoff_s(a) for a in range(4)]
+
+
+def test_run_fault_load_is_deterministic_and_degrades_gracefully():
+    sched = FaultSchedule(seed=123, horizon_s=1.0, events=(
+        FaultEvent(t_s=0.02, fault=RequestStorm(rate_factor=8.0,
+                                                duration_s=0.2)),
+        FaultEvent(t_s=0.05, fault=EngineDegrade(surviving_frac=0.5)),
+    ))
+    a = run_fault_load(sched, requests=48, seed=7, smoke=True)
+    b = run_fault_load(sched, requests=48, seed=7, smoke=True)
+    assert a == b                               # virtual clock: exact repro
+    assert a["requests"] > 48                   # the storm added arrivals
+    assert a["fault_events"] == 2
+    assert a["breaker_opens"] >= 1
+    assert a["served_ok"] + a["sheds"] + a["expired"] \
+           + a["deadline_late"] == a["requests"]
+    assert 0.0 < a["availability_pct"] <= 100.0
+    healthy = run_fault_load(None, requests=48, seed=7, smoke=True)
+    assert healthy["availability_pct"] >= a["availability_pct"]
+    assert healthy["fault_events"] == 0 and healthy["breaker_opens"] == 0
+
+
+def test_storm_windows_shape():
+    sched = FaultSchedule(seed=0, horizon_s=1.0, events=(
+        FaultEvent(t_s=0.1, fault=RequestStorm(rate_factor=4.0,
+                                               duration_s=0.2)),))
+    assert storm_windows(sched) == ((0.1, pytest.approx(0.3), 4.0),)
+
+
+# ------------------------------------------------------------ chaos smoke
+def test_chaos_harness_smoke_holds_all_invariants():
+    rep = run_chaos(4, smoke=True, seed0=0)
+    assert rep.ok and rep.violations == []
+    assert rep.schedules == 4 and rep.fault_events >= 4
+    assert rep.word_drift == 0 and rep.replan_mismatches == 0
+    assert rep.check_diagnostics == 0
+    assert rep.availability_min_pct >= 50.0
+    assert "chaos: 4 schedules" in rep.summary()
+
+
+def test_chaos_strict_mode_raises_on_floor_breach():
+    with pytest.raises(InvariantViolation):
+        run_chaos(2, smoke=True, seed0=0, availability_floor_pct=101.0,
+                  strict=True)
+
+
+# ------------------------------------------------------------- lint RPL105
+def _lint105(source, rel="src/repro/models/x.py"):
+    rule = rlint.bare_except_rule(rlint.NON_LIBRARY_CODE)
+    return rule.run(ast.parse(source), rel)
+
+
+def test_rpl105_bare_and_swallowed_excepts():
+    assert CODES["RPL105"].slug == "bare-except"
+    assert CODES["RPL105"].severity is Severity.ERROR
+    got = _lint105("try:\n    f()\nexcept:\n    pass\n")
+    assert [d.code for d in got] == ["RPL105"]
+    got = _lint105("try:\n    f()\nexcept Exception:\n    pass\n")
+    assert [d.code for d in got] == ["RPL105"]
+    got = _lint105("try:\n    f()\nexcept (ValueError, Exception):\n"
+                   "    ...\n")
+    assert [d.code for d in got] == ["RPL105"]
+    # typed handlers, and broad handlers that actually *do* something, pass
+    assert _lint105("try:\n    f()\nexcept ValueError:\n    pass\n") == []
+    assert _lint105("try:\n    f()\nexcept Exception as e:\n"
+                    "    log(e)\n    raise\n") == []
+    # harness/script roots are exempt from the rule entirely
+    assert _lint105("try:\n    f()\nexcept Exception:\n    pass\n",
+                    rel="benchmarks/run.py") == []
+    assert _lint105("try:\n    f()\nexcept:\n    pass\n",
+                    rel="tools/x.py") == []

@@ -27,14 +27,20 @@ RPL104  raw wall-clock reads (``time.perf_counter`` and friends) live only
         harnesses), and ``launch/planserve.py`` (the virtual-clock load
         generator). Everywhere else measures via ``repro.obs.Stopwatch`` so
         every timed interval can double as a trace span.
+RPL105  no bare ``except:``, and no ``except Exception: pass``, anywhere
+        under ``src/repro/``: the fault-injection layer (``repro.faults``,
+        ``repro.errors``) exists so failures are dispatched on by *type* —
+        a swallowed exception is an un-observable fault. Harness/script
+        roots (``benchmarks/``, ``examples/``, ``tools/``) are exempt.
 RPL110  ``repro.core.bwmodel`` / ``repro.core.partitioner`` are deprecation
         shims; new code imports ``repro.plan``. Only the shim package itself
         may touch them.
 """
 
-from repro.check.lint import (adhoc_timing_rule, cross_assign_rule,
-                              deprecated_import_rule, magic_energy_rule,
-                              raw_byte_arith_rule, raw_pallas_rule)
+from repro.check.lint import (adhoc_timing_rule, bare_except_rule,
+                              cross_assign_rule, deprecated_import_rule,
+                              magic_energy_rule, raw_byte_arith_rule,
+                              raw_pallas_rule)
 
 #: modules allowed to convert words -> bytes
 BYTE_MODEL_MODULES = (
@@ -58,5 +64,6 @@ RULES = [
     raw_pallas_rule(("src/repro/kernels/*",)),
     adhoc_timing_rule(("src/repro/obs/*", "benchmarks/*",
                        "src/repro/launch/planserve.py")),
+    bare_except_rule(("benchmarks/*", "examples/*", "tools/*")),
     deprecated_import_rule(("src/repro/core/*",)),
 ]
